@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, the benchmark dataset (paper §4)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.data.pipeline import hacc_benchmark_epsilon, make_clustered_points
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds over iters (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def benchmark_points(n: int, seed: int = 0) -> tuple[np.ndarray, float]:
+    """The paper's benchmark problem, downscaled: clustered NFW-like points
+    in the unit box with ε = b (V/n)^{1/3}, b = 0.168 (paper footnote 1).
+    The paper's snapshot is 37M points on an A100; CPU benches use n ≤ ~10^5
+    with the SAME ε convention so the density regime matches."""
+    pts = make_clustered_points(np.random.default_rng(seed), n)
+    eps = hacc_benchmark_epsilon(1.0, n)
+    return pts, eps
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

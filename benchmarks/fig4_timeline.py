@@ -1,0 +1,106 @@
+"""Figure 4 reproduction: the DBSCAN improvement ladder on the benchmark
+problem (minPts=2, ε = 0.168·(V/n)^{1/3}).
+
+Paper milestones -> our variants:
+  (1) initial adjacency-graph + CC          -> dbscan_graph_cc
+  (2) FDBSCAN + callbacks (fused, O(n))     -> fdbscan, stack traversal, 32-bit
+  (2b) + early termination (§4.1.2)         -> early_stop=True
+  (4) stackless (rope) traversal            -> use_stack=False
+  (6) 64-bit Morton codes                   -> use_64bit=True
+  (7) pair traversal                        -> fdbscan_pair
+  (8) FDBSCAN-DenseBox                      -> fdbscan_densebox
+  (+) TPU-native tiled grid (beyond paper)  -> fdbscan_grid
+
+(3) Karras->Apetrei construction is not separable here: the JAX build uses
+closed-form range+rope construction (DESIGN.md §2), equivalent to Apetrei
+with recovered Karras ordering. Paper's net improvement over the ladder:
+~9.2x; exact per-step ratios differ on CPU vs A100 — the LADDER ORDER is
+the reproduced claim.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.dbscan import (dbscan_graph_cc, fdbscan, fdbscan_densebox,
+                               fdbscan_pair)
+from repro.core.fdbscan_grid import fdbscan_grid, grid_dims_for
+from benchmarks.common import benchmark_points, emit, timeit
+
+MIN_PTS = 2
+
+
+def ladder(n: int = 4096):
+    pts, eps = benchmark_points(n)
+    jp = jnp.asarray(pts)
+
+    variants = [
+        ("fig4_1_graph_cc", lambda: dbscan_graph_cc(jp, eps, MIN_PTS,
+                                                    neighbor_capacity=512,
+                                                    use_64bit=False)),
+        ("fig4_2_fdbscan_stack_noes", lambda: fdbscan(
+            jp, eps, MIN_PTS, use_stack=True, early_stop=False, use_64bit=False)),
+        ("fig4_2b_fdbscan_stack_es", lambda: fdbscan(
+            jp, eps, MIN_PTS, use_stack=True, early_stop=True, use_64bit=False)),
+        ("fig4_4_stackless", lambda: fdbscan(
+            jp, eps, MIN_PTS, use_stack=False, early_stop=True, use_64bit=False)),
+        ("fig4_6_64bit", lambda: fdbscan(
+            jp, eps, MIN_PTS, use_stack=False, early_stop=True, use_64bit=True)),
+        ("fig4_7_pair", lambda: fdbscan_pair(jp, eps, MIN_PTS, edge_capacity=8)),
+        ("fig4_8_densebox", lambda: fdbscan_densebox(jp, eps, MIN_PTS)),
+    ]
+    dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
+    cap = 256
+    # The TPU-native grid runs the Pallas kernels in INTERPRET mode on CPU:
+    # per-grid-step Python dispatch makes large stencil grids infeasible here
+    # (on the TPU target the (cells x 27) grid is the fast path). Include it
+    # in the ladder only when the interpreted grid is small enough.
+    if np.prod(dims) <= 4096:
+        variants.append((
+            "fig4_tpu_grid",
+            lambda: fdbscan_grid(jp, eps, MIN_PTS,
+                                 scene_lo=np.zeros(3, np.float32),
+                                 grid_dims=dims, capacity=cap)))
+    else:
+        emit("fig4_tpu_grid", 0.0,
+             f"skipped_on_cpu_interpret(cells={int(np.prod(dims))});"
+             "validated vs faithful tier in tests/test_fdbscan_grid.py")
+
+    times = {}
+    labels = {}
+    for name, fn in variants:
+        t = timeit(lambda fn=fn: fn(), iters=2)
+        times[name] = t
+        res = fn()
+        if not hasattr(res, "labels"):      # fdbscan_grid: (result, overflow)
+            res = res[0]
+        labels[name] = res.labels
+        base = times["fig4_1_graph_cc"]
+        emit(name, t, f"n={n};speedup_vs_initial={base / t:.2f}x")
+
+    # all variants agree on the clustering (partition equality on cores)
+    from repro.core.ref_numpy import labels_equivalent, core_mask_ref
+    core = core_mask_ref(pts, eps, MIN_PTS)
+    ref = np.asarray(labels["fig4_6_64bit"])
+    for name, lab in labels.items():
+        ok = labels_equivalent(np.asarray(lab), ref, core)
+        assert ok, f"{name} disagrees with the ladder reference"
+    # End-to-end = initial vs the best variant. Mirrors the paper: "FDBSCAN
+    # became the faster one for this problem with the introduction of the
+    # pair traversal" — DenseBox's inner cell scans are additionally slow on
+    # the CPU-interpret substrate (no SIMT; vmapped while-loops).
+    best = min((t, n) for n, t in times.items() if n != "fig4_1_graph_cc")
+    total = times["fig4_1_graph_cc"] / best[0]
+    emit("fig4_total_speedup", 0.0,
+         f"ladder_end_to_end={total:.2f}x(best={best[1]});paper=9.2x")
+    return times
+
+
+def main() -> None:
+    ladder()
+
+
+if __name__ == "__main__":
+    main()

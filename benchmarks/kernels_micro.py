@@ -1,0 +1,32 @@
+"""Microbenchmarks for the Pallas kernels (interpret mode on CPU — relative
+numbers only; the kernels' target is the TPU MXU) and their jnp references.
+The interesting derived number on CPU is ref-vs-kernel agreement + the work
+scaling; absolute us/call is backend-specific."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from benchmarks.common import emit, timeit
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for n, d in ((1024, 3), (1024, 64), (4096, 3)):
+        x = jnp.asarray(rng.uniform(0, 1, (n, d)), jnp.float32)
+        eps = 0.1
+        t_ref = timeit(lambda: ref.pairwise_count_ref(x, x, eps * eps))
+        t_k = timeit(lambda: ops.eps_neighbor_counts(x, x, eps))
+        got = np.asarray(ops.eps_neighbor_counts(x, x, eps))
+        want = np.asarray(ref.pairwise_count_ref(x, x, eps * eps))
+        # pairs within ~1e-5 relative of eps are float knife-edges: the
+        # kernel's expanded-form distance can round across the threshold.
+        mismatch = int((got != want).sum())
+        assert mismatch <= max(4, n // 1000), (n, d, mismatch)
+        emit(f"kernel_pairwise_count_n{n}_d{d}", t_k,
+             f"ref_us={t_ref * 1e6:.1f};knife_edge_rows={mismatch}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSONs in results/dryrun/."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh_kind: str = "single") -> list[dict]:
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{mesh_kind}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant "
+           "| mem/dev (GB) | fits | useful/HLO | MFU bound |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        rf = r["roofline"]
+        mm = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['t_compute_s'] * 1e3:.1f} | {rf['t_memory_s'] * 1e3:.1f} "
+            f"| {rf['t_collective_s'] * 1e3:.1f} | {rf['dominant']} "
+            f"| {mm['total_per_dev'] / 1e9:.2f} | {'Y' if mm['fits_16GB'] else 'N'} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['mfu_bound']:.3f} |" if rf["useful_flops_ratio"] else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows = load(mesh)
+    if not rows:
+        print(f"no dry-run results for mesh={mesh} in {RESULTS}")
+        return
+    print(render(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller problem sizes")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import fig1_insitu, fig4_timeline, kernels_micro, table1_morton
+
+    suites = {
+        "table1": lambda: table1_morton.main(n=(1 << 15) if args.fast else (1 << 18)),
+        "fig4": lambda: fig4_timeline.ladder(n=512 if args.fast else 2048),
+        "fig1": fig1_insitu.main,
+        "kernels": kernels_micro.main,
+    }
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

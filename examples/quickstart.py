@@ -1,0 +1,44 @@
+"""Quickstart: the paper's contribution in 30 lines.
+
+Cluster a cosmology-style point cloud with FDBSCAN (the ArborX algorithm,
+§4.3.3) and with the TPU-native tiled-grid implementation, and check they
+agree. Runs on CPU in seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.dbscan import fdbscan
+from repro.core.fdbscan_grid import fdbscan_grid, grid_dims_for
+from repro.data.pipeline import hacc_benchmark_epsilon, make_clustered_points
+
+# --- the paper's benchmark setup, downscaled -------------------------------
+# (CPU demo scale: the paper's ε = b(V/n)^{1/3} at n=37M maps to very fine
+# grids; on CPU-interpret we keep the same density REGIME by shrinking n
+# and widening ε so the stencil grid stays small.)
+n = 512
+points = make_clustered_points(np.random.default_rng(0), n)
+eps = 4 * hacc_benchmark_epsilon(volume=1.0, n_particles=n)  # b (V/n)^{1/3}
+min_pts = 2                                                  # FOF
+
+# --- faithful tier: BVH + stackless traversal + fused union-find -----------
+res = fdbscan(jnp.asarray(points), eps, min_pts)
+n_noise = int((np.asarray(res.labels) < 0).sum())
+print(f"FDBSCAN:  {int((np.asarray(res.labels) >= 0).sum())} clustered, "
+      f"{n_noise} noise, union rounds={int(res.num_rounds)}")
+
+# --- TPU-native tier: ε-cell binning + MXU stencil kernels -----------------
+dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
+res_g, overflowed = fdbscan_grid(
+    jnp.asarray(points), eps, min_pts,
+    scene_lo=np.zeros(3, np.float32), grid_dims=dims, capacity=256)
+assert not bool(overflowed)
+print(f"TPU grid: {int((np.asarray(res_g.labels) >= 0).sum())} clustered "
+      f"({int(np.prod(dims))} cells x 27-stencil)")
+
+# --- same partitions? -------------------------------------------------------
+from repro.core.ref_numpy import labels_equivalent
+assert labels_equivalent(np.asarray(res.labels), np.asarray(res_g.labels),
+                         np.asarray(res.core_mask))
+print("faithful tier and TPU tier agree.")

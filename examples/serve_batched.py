@@ -1,0 +1,16 @@
+"""Serving example: batched prefill + lock-step decode on a smoke model.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch gemma2-9b]
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    args = ap.parse_args()
+    sys.exit(serve_main(["--arch", args.arch, "--smoke",
+                         "--requests", "4", "--prompt-len", "32",
+                         "--gen-tokens", "12"]))

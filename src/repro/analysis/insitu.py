@@ -1,0 +1,127 @@
+"""In-situ analysis: the paper's contribution embedded in the training loop.
+
+HACC pattern (paper §2): the simulation timesteps on the accelerators and,
+every K long-range-force steps, runs FOF/DBSCAN halo finding in-situ —
+ArborX made that step ~10x faster so analysis now runs at full cadence.
+
+Our framework's analog: every ``cadence`` optimizer steps, run DBSCAN on
+accelerator-resident point clouds derived from training state, without
+leaving the device:
+
+* embedding-space clustering — sampled token-embedding rows; detects
+  representation collapse / near-duplicate embeddings (minPts=2 ≡ FOF);
+* MoE router clustering — expert centroids in router space; detects expert
+  collapse (experts whose router columns cluster within ε).
+
+Both consume the SAME clustering core benchmarked in benchmarks/fig4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dbscan import fdbscan
+from repro.core import union_find
+
+
+@dataclasses.dataclass(frozen=True)
+class InsituConfig:
+    cadence: int = 10              # analysis every K steps (HACC: ~100/625)
+    sample_rows: int = 512         # embedding rows sampled per analysis
+    eps_quantile: float = 0.01     # ε from the pairwise-distance quantile
+    min_pts: int = 2               # FOF
+    project_dim: int = 3           # random projection for the geometric core
+
+
+def _sample_rows(key, table: jax.Array, n: int) -> jax.Array:
+    idx = jax.random.choice(key, table.shape[0], (min(n, table.shape[0]),),
+                            replace=False)
+    return table[idx]
+
+
+def _project(key, x: jax.Array, d: int) -> jax.Array:
+    """Random projection to the low-dim space the geometric core indexes
+    (Johnson-Lindenstrauss: cluster structure survives)."""
+    r = jax.random.normal(key, (x.shape[-1], d), jnp.float32) / np.sqrt(x.shape[-1])
+    y = x.astype(jnp.float32) @ r
+    lo = y.min(axis=0)
+    span = jnp.maximum(y.max(axis=0) - lo, 1e-6)
+    return (y - lo) / span
+
+
+def _eps_from_quantile(pts: jax.Array, q: float) -> jax.Array:
+    d2 = jnp.sum((pts[:, None] - pts[None]) ** 2, axis=-1)
+    n = pts.shape[0]
+    off = d2[jnp.triu_indices(n, 1)]
+    return jnp.sqrt(jnp.quantile(off, q))
+
+
+def embedding_cluster_stats(params: dict, cfg: InsituConfig,
+                            step: int) -> dict[str, jax.Array]:
+    """Cluster sampled embedding rows; many clustered rows => collapsing
+    representations (the 'halo finding' of the representation space)."""
+    key = jax.random.PRNGKey(step)
+    rows = _sample_rows(key, params["embed"], cfg.sample_rows)
+    pts = _project(jax.random.fold_in(key, 1), rows, cfg.project_dim)
+    eps = _eps_from_quantile(pts, cfg.eps_quantile)
+    res = fdbscan(pts, eps, cfg.min_pts)
+    n_clusters = union_find.compress(
+        jnp.where(res.labels >= 0, res.labels, jnp.arange(res.labels.shape[0])))
+    n_clustered = jnp.sum(res.labels >= 0)
+    num_clusters = jnp.sum((res.labels == jnp.arange(res.labels.shape[0]))
+                           & (res.labels >= 0))
+    return {
+        "insitu/embed_eps": eps,
+        "insitu/embed_clustered_frac": n_clustered / res.labels.shape[0],
+        "insitu/embed_num_clusters": num_clusters,
+        "insitu/embed_union_rounds": res.num_rounds,
+    }
+
+
+def router_cluster_stats(params: dict, cfg: InsituConfig, step: int,
+                         router_path=("layers",)) -> dict[str, jax.Array]:
+    """Cluster MoE expert router columns (d_model -> n_experts): experts
+    whose columns land in one ε-cluster are redundant (expert collapse)."""
+    routers = []
+
+    def visit(path, leaf):
+        if "router" in jax.tree_util.keystr(path):
+            w = leaf
+            if w.ndim == 3:      # scan-stacked (G, D, E): take mean over G
+                w = w.mean(axis=0)
+            routers.append(w)
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    if not routers:
+        return {}
+    cols = jnp.concatenate([w.T.astype(jnp.float32) for w in routers])  # (E*, D)
+    key = jax.random.PRNGKey(step + 7)
+    pts = _project(key, cols, cfg.project_dim)
+    eps = _eps_from_quantile(pts, 0.05)
+    res = fdbscan(pts, eps, 2)
+    collapsed = jnp.sum(res.labels >= 0)
+    return {
+        "insitu/router_eps": eps,
+        "insitu/router_collapsed_experts": collapsed,
+    }
+
+
+class InsituAnalyzer:
+    """Hooked into the supervisor loop: runs at the configured cadence."""
+
+    def __init__(self, cfg: InsituConfig):
+        self.cfg = cfg
+        self.history: list[tuple[int, dict]] = []
+
+    def maybe_run(self, params: dict, step: int) -> dict[str, Any]:
+        if step % self.cfg.cadence != 0:
+            return {}
+        stats = dict(embedding_cluster_stats(params, self.cfg, step))
+        stats.update(router_cluster_stats(params, self.cfg, step))
+        host = {k: float(np.asarray(v)) for k, v in stats.items()}
+        self.history.append((step, host))
+        return host

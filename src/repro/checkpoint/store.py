@@ -1,0 +1,133 @@
+"""Sharded checkpointing: npz shards + msgpack-free JSON manifest, atomic
+commit, async save thread, elastic restore (re-shard to a different mesh).
+
+Layout:
+  <dir>/step_<N>/
+    manifest.json          # step, leaf paths, shapes, dtypes, shard counts
+    shard_<k>.npz          # leaf arrays (flat key -> array), host k's slice
+    COMMIT                 # written LAST: a checkpoint without it is torn
+
+Fault-tolerance contract (runtime/supervisor.py):
+  * saves are atomic (tmp dir + rename + COMMIT marker),
+  * latest_step() ignores uncommitted/torn checkpoints,
+  * restore() works onto ANY mesh: arrays are saved unsharded per leaf
+    (single-host container) or as host shards that concat on axis 0; the
+    caller re-applies shardings, so restoring 256-chip state onto a
+    512-chip mesh (elastic reshape) is just a different re-shard.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: dict[str, Any]):
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+    leaves = [flat[p] for p in paths]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+class CheckpointStore:
+    def __init__(self, directory: str | os.PathLike):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._async_thread: threading.Thread | None = None
+
+    # --- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree) -> pathlib.Path:
+        """Synchronous atomic save."""
+        host_arrays = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host_arrays)
+
+    def save_async(self, step: int, tree) -> None:
+        """Device->host copy happens NOW (so training can step on), the disk
+        write happens on a background thread (off the step path)."""
+        self.wait()
+        host_arrays = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._async_thread = threading.Thread(
+            target=self._write, args=(step, host_arrays), daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, host_tree) -> pathlib.Path:
+        flat = _flatten(host_tree)
+        final = self.dir / f"step_{step:08d}"
+        tmp = pathlib.Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
+        try:
+            np.savez(tmp / "shard_0.npz", **{k: np.asarray(v) for k, v in flat.items()})
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "leaves": {k: {"shape": list(np.shape(v)),
+                               "dtype": str(np.asarray(v).dtype)}
+                           for k, v in flat.items()},
+                "num_shards": 1,
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+            (tmp / "COMMIT").write_text("ok")
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        return final
+
+    # --- restore --------------------------------------------------------------
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "COMMIT").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: int | None = None, shardings=None):
+        """Restore into the structure of ``template``. ``shardings`` (same
+        tree shape, NamedShardings) re-shards onto the CURRENT mesh —
+        elastic reshape is just restoring with different shardings."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        if not (path / "COMMIT").exists():
+            raise FileNotFoundError(f"checkpoint {path} is torn (no COMMIT)")
+        data = np.load(path / "shard_0.npz")
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(jax.numpy.asarray(x), s), tree, shardings)
+        return tree, step
+
+    def prune(self, keep: int = 3) -> None:
+        for s in self.steps()[:-keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,52 @@
+"""repro.core — the paper's contribution: ArborX-style geometric search +
+DBSCAN clustering, reimplemented for JAX/TPU.
+
+Faithful tier (GPU-paper semantics, validated against the numpy oracle):
+  morton, bvh (LBVH + ropes), traversal (stack / stackless / pair),
+  union_find, dbscan (graph-CC, FDBSCAN, FDBSCAN-pair, FDBSCAN-DenseBox),
+  knn (priority-queue nearest search), emst (Boruvka Euclidean MST),
+  correlation (2-pt pair counts), interpolate (MLS), raycast — the full
+  ArborX §3.2 functionality surface.
+
+TPU-native tier (the production path):
+  cell_grid + fdbscan_grid (tiled ε-stencil DBSCAN on the MXU, backed by
+  repro.kernels.pairwise), distributed (shard_map multi-device DBSCAN).
+"""
+from repro.core.bvh import Bvh, build_bvh, build_bvh_objects, SENTINEL
+from repro.core.cell_grid import CellGrid, build_cell_grid, cell_box
+from repro.core.dbscan import (
+    NOISE,
+    DbscanResult,
+    count_neighbors,
+    dbscan_graph_cc,
+    fdbscan,
+    fdbscan_densebox,
+    fdbscan_pair,
+)
+from repro.core.geometry import Aabb, aabb_of_points
+from repro.core.morton import morton32, morton64, normalize_points
+from repro.core.traversal import (
+    pair_traverse_sphere,
+    traverse_sphere_stack,
+    traverse_sphere_stackless,
+)
+from repro.core.knn import KnnResult, knn
+from repro.core.emst import EmstResult, emst
+from repro.core.correlation import pair_count_histogram, two_point_correlation
+from repro.core.interpolate import mls_interpolate
+from repro.core.raycast import RayHits, raycast
+from repro.core import union_find
+
+__all__ = [
+    "Bvh", "build_bvh", "build_bvh_objects", "SENTINEL",
+    "CellGrid", "build_cell_grid", "cell_box",
+    "NOISE", "DbscanResult", "count_neighbors",
+    "dbscan_graph_cc", "fdbscan", "fdbscan_densebox", "fdbscan_pair",
+    "Aabb", "aabb_of_points",
+    "morton32", "morton64", "normalize_points",
+    "pair_traverse_sphere", "traverse_sphere_stack", "traverse_sphere_stackless",
+    "KnnResult", "knn", "EmstResult", "emst",
+    "pair_count_histogram", "two_point_correlation",
+    "mls_interpolate", "RayHits", "raycast",
+    "union_find",
+]

@@ -1,0 +1,470 @@
+"""DBSCAN variants from the paper (§4.3), faithful tier in pure JAX.
+
+Variants, matching the Fig. 4 improvement ladder:
+
+* ``dbscan_graph_cc``   — initial implementation (§4.3.1): materialize the
+  ε-adjacency graph (bounded neighbor buffers — the paper's documented memory
+  drawback), then run connected components (ECL-CC analogue).
+* ``fdbscan``           — "fused" DBSCAN (§4.3.3): no neighbor storage.
+  Phase 1 counts ε-neighbors with EARLY TERMINATION at minPts (§4.1.2);
+  Phase 2 runs min-label hook+compress rounds where each round's candidate
+  labels come straight from a fused traversal callback (§4.1.1), O(n) memory.
+* ``fdbscan_pair``      — FDBSCAN whose union phase uses PAIR TRAVERSAL
+  (§4.2.3, improvement (7)): each unordered pair (i, j), i<j in Morton order,
+  is visited exactly once; cross-root pairs are captured into a small
+  per-query buffer and hooked. Buffer overflow is legal: every overflowing
+  round strictly reduces the number of components, so the outer fixpoint
+  terminates.
+* ``fdbscan_densebox``  — FDBSCAN-DenseBox (§4.3.4): mixed BVH over dense
+  ε/√d cells + outside points; dense-cell points are pre-classified core and
+  pre-unioned, intra-cell distance tests are eliminated, and a whole cell
+  within ε of a query is processed wholesale.
+
+All return int32 labels: core/border points carry their cluster root (the
+minimum original index in the component), noise = -1. Cluster-partition
+semantics are validated against ``ref_numpy.dbscan_ref``.
+
+Union-find note (DESIGN.md deviation 3): ArborX's ECL-CC uses atomic CAS
+hooking; XLA has no atomic CAS, so unions are expressed as deterministic
+scatter-min hooking + pointer jumping (same disjoint-set family).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import union_find
+from repro.core.bvh import Bvh, build_bvh, build_bvh_objects
+from repro.core.cell_grid import CellGrid, build_cell_grid, cell_box
+from repro.core.geometry import aabb_of_points, point_aabb_dist2
+from repro.core.traversal import (
+    pair_traverse_sphere,
+    traverse_sphere_stack,
+    traverse_sphere_stackless,
+)
+
+NOISE = jnp.int32(-1)
+
+__all__ = [
+    "NOISE",
+    "DbscanResult",
+    "count_neighbors",
+    "dbscan_graph_cc",
+    "fdbscan",
+    "fdbscan_pair",
+    "fdbscan_densebox",
+]
+
+
+class DbscanResult(NamedTuple):
+    labels: jax.Array       # (n,) int32; cluster root or -1 (noise)
+    core_mask: jax.Array    # (n,) bool
+    num_rounds: jax.Array   # () int32 — union fixpoint rounds taken
+
+
+def _scene(points):
+    box = aabb_of_points(points)
+    # Pad degenerate extents so Morton normalization is well-defined.
+    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
+    return box.lo - pad, box.hi + pad
+
+
+# ---------------------------------------------------------------------------
+# Neighbor counting (phase 1) — fused callback + early termination (§4.1.2)
+# ---------------------------------------------------------------------------
+
+def count_neighbors(bvh: Bvh, points: jax.Array, queries: jax.Array, eps,
+                    min_pts: int | None = None, use_stack: bool = False) -> jax.Array:
+    """ε-neighbor counts for each query (neighborhood includes the point
+    itself). With ``min_pts`` set, counting STOPS at min_pts (early
+    termination; returned counts saturate there)."""
+    eps2 = jnp.asarray(eps, points.dtype) ** 2
+
+    # Close over per-query centers via a wrapper (vmap binds the center).
+    def run(center):
+        def fn(count, j, _sorted):
+            hit = jnp.sum((points[j] - center) ** 2) <= eps2
+            count = count + hit.astype(jnp.int32)
+            done = jnp.bool_(False) if min_pts is None else count >= min_pts
+            return count, done
+        trav = traverse_sphere_stack if use_stack else traverse_sphere_stackless
+        return trav(bvh, center[None], eps, fn, jnp.int32(0))[0]
+
+    return jax.vmap(run)(queries)
+
+
+def _core_mask(bvh, points, eps, min_pts, early_stop=True, use_stack=False):
+    counts = count_neighbors(bvh, points, points, eps,
+                             min_pts=min_pts if early_stop else None,
+                             use_stack=use_stack)
+    return counts >= min_pts
+
+
+# ---------------------------------------------------------------------------
+# Min-label candidate traversal (shared by fdbscan variants)
+# ---------------------------------------------------------------------------
+
+def _min_core_label_pass(bvh, points, eps, parent, core, queries_mask, n):
+    """For each point i with queries_mask[i], traverse and return
+    min over core ε-neighbors j of parent[j] (n if none)."""
+    eps2 = jnp.asarray(eps, points.dtype) ** 2
+
+    def run(center, active):
+        def fn(best, j, _sorted):
+            hit = (jnp.sum((points[j] - center) ** 2) <= eps2) & core[j]
+            best = jnp.where(hit, jnp.minimum(best, parent[j]), best)
+            return best, jnp.bool_(False)
+
+        out = traverse_sphere_stackless(bvh, center[None], eps, fn, jnp.int32(n))[0]
+        return jnp.where(active, out, jnp.int32(n))
+
+    return jax.vmap(run)(points, queries_mask)
+
+
+def _finish_labels(parent, border_candidate, core, n):
+    labels = jnp.where(core, parent, jnp.where(border_candidate < n, border_candidate, NOISE))
+    # Border candidates were captured against possibly-stale parents; chase.
+    labels_safe = jnp.where(labels >= 0, labels, jnp.arange(n, dtype=jnp.int32))
+    resolved = union_find.compress(jnp.where(core, parent, labels_safe).astype(jnp.int32))
+    return jnp.where(labels >= 0, resolved, NOISE).astype(jnp.int32)
+
+
+def _union_rounds(bvh, points, eps, core, n, max_rounds=64):
+    """Fixpoint: hook each core point's root under the min core-neighbor label,
+    then pointer-jump. Labels converge to the min original index per cluster."""
+    parent0 = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        _, changed, r = state
+        return changed & (r < max_rounds)
+
+    def body(state):
+        parent, _, r = state
+        m = _min_core_label_pass(bvh, points, eps, parent, core, core, n)
+        m = jnp.where(core, m, n)
+        # hook: parent[parent[i]] <- min(., m_i) for core i (scatter-min, det.)
+        tgt = jnp.where(core, parent, n - 1)  # dummy target for non-core
+        upd = jnp.where(core, jnp.minimum(m, parent), parent[tgt])
+        parent2 = parent.at[tgt].min(upd)
+        parent2 = union_find.compress(parent2)
+        return parent2, jnp.any(parent2 != parent), r + 1
+
+    parent, _, rounds = jax.lax.while_loop(cond, body, (parent0, jnp.bool_(True), jnp.int32(0)))
+    return parent, rounds
+
+
+@partial(jax.jit, static_argnames=("min_pts", "early_stop", "use_stack", "use_64bit"))
+def fdbscan(points: jax.Array, eps, min_pts: int, *, early_stop: bool = True,
+            use_stack: bool = False, use_64bit: bool = True) -> DbscanResult:
+    """FDBSCAN (§4.3.3): fused traversal + count + union, O(n) memory."""
+    n = points.shape[0]
+    lo, hi = _scene(points)
+    bvh = build_bvh(points, lo, hi, use_64bit=use_64bit)
+
+    core = _core_mask(bvh, points, eps, min_pts, early_stop=early_stop, use_stack=use_stack)
+    parent, rounds = _union_rounds(bvh, points, eps, core, n)
+    border = _min_core_label_pass(bvh, points, eps, parent, core, ~core, n)
+    labels = _finish_labels(parent, border, core, n)
+    return DbscanResult(labels=labels, core_mask=core, num_rounds=rounds)
+
+
+# ---------------------------------------------------------------------------
+# Initial implementation (§4.3.1): explicit adjacency graph + CC
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("min_pts", "neighbor_capacity", "use_64bit"))
+def dbscan_graph_cc(points: jax.Array, eps, min_pts: int,
+                    neighbor_capacity: int = 64, use_64bit: bool = True) -> DbscanResult:
+    """The pre-callback baseline: store the ε-graph, then run CC.
+
+    Reproduces the documented drawback — O(n·cap) memory, and the result is
+    only correct when no neighborhood exceeds ``neighbor_capacity`` (the
+    paper: "storing the found objects results in running out of memory").
+    Kept for the Fig. 4 benchmark ladder.
+    """
+    n = points.shape[0]
+    lo, hi = _scene(points)
+    bvh = build_bvh(points, lo, hi, use_64bit=use_64bit)
+    eps2 = jnp.asarray(eps, points.dtype) ** 2
+
+    def run(center):
+        def fn(carry, j, _sorted):
+            buf, cnt = carry
+            hit = jnp.sum((points[j] - center) ** 2) <= eps2
+            slot = jnp.clip(cnt, 0, neighbor_capacity - 1)
+            buf = jnp.where(hit, buf.at[slot].set(j), buf)
+            cnt = cnt + hit.astype(jnp.int32)
+            return (buf, cnt), jnp.bool_(False)
+
+        buf0 = jnp.full((neighbor_capacity,), -1, jnp.int32)
+        return traverse_sphere_stackless(bvh, center[None], eps, fn, (buf0, jnp.int32(0)))
+
+    nbrs, counts = jax.vmap(lambda c: jax.tree.map(lambda x: x[0], run(c)))(points)
+    core = counts >= min_pts
+
+    # Core-core edges from the stored graph.
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], nbrs.shape)
+    valid = (nbrs >= 0) & core[src] & core[jnp.clip(nbrs, 0, n - 1)]
+    parent = union_find.connected_components(n, src.ravel(), jnp.clip(nbrs, 0, n - 1).ravel(),
+                                             valid.ravel())
+    parent = jnp.where(core, parent, jnp.arange(n, dtype=jnp.int32))
+
+    # Border: min core-neighbor root from the stored graph.
+    nbr_safe = jnp.clip(nbrs, 0, n - 1)
+    cand = jnp.where((nbrs >= 0) & core[nbr_safe], parent[nbr_safe], n)
+    border = jnp.min(cand, axis=1).astype(jnp.int32)
+    labels = _finish_labels(parent, border, core, n)
+    return DbscanResult(labels=labels, core_mask=core, num_rounds=jnp.int32(1))
+
+
+# ---------------------------------------------------------------------------
+# FDBSCAN with pair traversal (§4.2.3, improvement (7))
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("min_pts", "edge_capacity", "use_64bit"))
+def fdbscan_pair(points: jax.Array, eps, min_pts: int,
+                 edge_capacity: int = 8, use_64bit: bool = True) -> DbscanResult:
+    """FDBSCAN whose union phase visits each unordered pair once.
+
+    Each core query i captures up to ``edge_capacity`` CROSS-ROOT core
+    neighbors j > i (in Morton order) and stops early when the buffer fills —
+    the callback-side analogue of ECL-CC skipping same-root unions. The outer
+    loop repeats while any buffer overflowed or labels changed; every
+    overflowing round performs ≥1 merging union, so progress is guaranteed.
+    """
+    n = points.shape[0]
+    lo, hi = _scene(points)
+    bvh = build_bvh(points, lo, hi, use_64bit=use_64bit)
+    eps2 = jnp.asarray(eps, points.dtype) ** 2
+
+    core = _core_mask(bvh, points, eps, min_pts, early_stop=True)
+
+    def capture(parent):
+        def run(unused_center, i):
+            def fn(carry, i_orig, j_orig):
+                buf, cnt = carry
+                hit = (jnp.sum((points[j_orig] - points[i_orig]) ** 2) <= eps2)
+                hit = hit & core[i_orig] & core[j_orig] & (parent[i_orig] != parent[j_orig])
+                slot = jnp.clip(cnt, 0, edge_capacity - 1)
+                buf = jnp.where(hit, buf.at[slot].set(j_orig), buf)
+                cnt = cnt + hit.astype(jnp.int32)
+                return (buf, cnt), cnt >= edge_capacity
+
+            buf0 = jnp.full((edge_capacity,), -1, jnp.int32)
+            return fn, buf0
+
+        fn, buf0 = run(None, None)
+        buf, cnt = pair_traverse_sphere(bvh, points, eps, fn, (buf0, jnp.int32(0)))
+        return buf, cnt
+
+    def cond(state):
+        _, changed, overflow, r = state
+        return (changed | overflow) & (r < 64)
+
+    def body(state):
+        parent, _, _, r = state
+        buf, cnt = capture(parent)
+        overflow = jnp.any(cnt >= edge_capacity)
+        # Buffer row k belongs to SORTED query k; its original id is leaf_perm[k].
+        src = jnp.broadcast_to(bvh.leaf_perm[:, None], buf.shape)
+        mask = buf >= 0
+        parent2 = union_find.hook_min(parent, src.ravel(),
+                                      jnp.clip(buf, 0, n - 1).ravel(), mask.ravel())
+        parent2 = union_find.compress(parent2)
+        return parent2, jnp.any(parent2 != parent), overflow, r + 1
+
+    parent0 = jnp.arange(n, dtype=jnp.int32)
+    parent, _, _, rounds = jax.lax.while_loop(
+        cond, body, (parent0, jnp.bool_(True), jnp.bool_(True), jnp.int32(0)))
+    parent = jnp.where(core, parent, jnp.arange(n, dtype=jnp.int32))
+
+    border = _min_core_label_pass(bvh, points, eps, parent, core, ~core, n)
+    labels = _finish_labels(parent, border, core, n)
+    return DbscanResult(labels=labels, core_mask=core, num_rounds=rounds)
+
+
+# ---------------------------------------------------------------------------
+# FDBSCAN-DenseBox (§4.3.4)
+# ---------------------------------------------------------------------------
+
+def _seg_min(values_sorted: jax.Array, run_start: jax.Array) -> jax.Array:
+    """Per-run min of values over the grid's cell runs (values in sorted order):
+    forward min-scan restarted at run heads, then backward broadcast."""
+    n = values_sorted.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_head = idx == run_start
+
+    def fwd(a, b):
+        # b overwrites if b is a head, else combine.
+        val_a, head_a = a
+        val_b, head_b = b
+        return jnp.where(head_b, val_b, jnp.minimum(val_a, val_b)), head_a | head_b
+
+    mins, _ = jax.lax.associative_scan(fwd, (values_sorted, is_head))
+    # mins[t] = min over [run_start..t]; the run's min is mins at the run END
+    # (run_start + run_length - 1), gathered by seg_min_per_point.
+    return mins
+
+
+def seg_min_per_point(values_sorted, run_start, run_length):
+    mins = _seg_min(values_sorted, run_start)
+    return mins[run_start + run_length - 1]
+
+
+@partial(jax.jit, static_argnames=("min_pts", "use_64bit"))
+def fdbscan_densebox(points: jax.Array, eps, min_pts: int,
+                     use_64bit: bool = True) -> DbscanResult:
+    """FDBSCAN-DenseBox (§4.3.4): mixed BVH over dense cells + loose points."""
+    import math
+
+    n, d = points.shape
+    lo, hi = _scene(points)
+    eps_f = jnp.asarray(eps, points.dtype)
+    eps2 = eps_f ** 2
+    grid = build_cell_grid(points, lo, hi, eps_f / math.sqrt(d))
+
+    dense_s = grid.dense_mask_sorted(min_pts)          # per sorted point
+    head_s = grid.is_run_head()
+    pts_sorted = points[grid.perm]
+
+    # --- Mixed leaf set in grid-sorted order (n fixed leaves): -------------
+    #   dense head      -> the cell's box           (active "cell" leaf)
+    #   dense non-head  -> its own point            (inactive; callback skips)
+    #   loose point     -> its own point
+    cell_lo, cell_hi = cell_box(grid, grid.cell_coord_sorted)
+    leaf_is_cell = dense_s & head_s
+    skip_leaf = dense_s & ~head_s
+    leaf_lo = jnp.where(leaf_is_cell[:, None], cell_lo, pts_sorted)
+    leaf_hi = jnp.where(leaf_is_cell[:, None], cell_hi, pts_sorted)
+    bvh = build_bvh_objects(leaf_lo, leaf_hi, lo, hi, use_64bit=use_64bit)
+
+    max_run = 1 << 20  # static bound for the inner cell scan
+
+    def cell_scan(center, start, length, init, step):
+        """Bounded loop over a cell's sorted points: step(carry, t) applied for
+        t in [start, start+length)."""
+        def body(state):
+            t, carry = state
+            carry = step(carry, t)
+            return t + 1, carry
+
+        def cond(state):
+            t, carry = state
+            return t < start + length
+
+        _, out = jax.lax.while_loop(cond, body, (start, init))
+        return out
+
+    # --- Phase 1: core classification. Dense-cell points are core for free. --
+    def count_query(center, active):
+        def leaf_fn(count, t, _sorted):
+            # t = grid-sorted object index.
+            def on_cell(count):
+                # Whole cell within eps? add run_length wholesale.
+                far2 = jnp.sum(jnp.maximum(jnp.abs(center - (cell_lo[t] + cell_hi[t]) * 0.5)
+                                           + grid.cell_size * 0.5, 0.0) ** 2)
+                whole = far2 <= eps2
+
+                def scan_cell(c):
+                    def step(cc, u):
+                        hit = jnp.sum((pts_sorted[u] - center) ** 2) <= eps2
+                        return cc + hit.astype(jnp.int32)
+                    return cell_scan(center, grid.run_start[t], grid.run_length[t], c, step)
+
+                return jnp.where(whole, count + grid.run_length[t], scan_cell(count))
+
+            def on_point(count):
+                hit = jnp.sum((pts_sorted[t] - center) ** 2) <= eps2
+                return count + hit.astype(jnp.int32)
+
+            count = jnp.where(
+                skip_leaf[t], count,
+                jnp.where(leaf_is_cell[t], on_cell(count), on_point(count)))
+            return count, count >= min_pts
+
+        out = traverse_sphere_stackless(bvh, center[None], eps_f, leaf_fn, jnp.int32(0))[0]
+        return jnp.where(active, out, jnp.int32(0))
+
+    # Queries only for loose (non-dense-cell) points, in grid-sorted order.
+    counts_s = jax.vmap(count_query)(pts_sorted, ~dense_s)
+    core_s = dense_s | (counts_s >= min_pts)
+    core = jnp.zeros(n, bool).at[grid.perm].set(core_s)
+
+    # --- Phase 2: union rounds. Pre-union dense cells to their min member. --
+    seg_min_orig = seg_min_per_point(grid.perm, grid.run_start, grid.run_length)
+    # Dense-cell points are pre-unioned to the min original index in their cell;
+    # scatter-min with own index elsewhere keeps identity.
+    parent0 = jnp.arange(n, dtype=jnp.int32).at[grid.perm].min(
+        jnp.where(dense_s, seg_min_orig, grid.perm))
+
+    def min_label_pass(parent, queries_mask_s):
+        # Per-cell current min label (for wholesale cell hits).
+        cell_lab = seg_min_per_point(parent[grid.perm], grid.run_start, grid.run_length)
+
+        def run(center, active):
+            def leaf_fn(best, t, _sorted):
+                def on_cell(best):
+                    far2 = jnp.sum((jnp.maximum(jnp.abs(center - (cell_lo[t] + cell_hi[t]) * 0.5), 0.0)
+                                    + grid.cell_size * 0.5) ** 2)
+                    whole = far2 <= eps2
+
+                    def scan_cell(b):
+                        def step(bb, u):
+                            hit = jnp.sum((pts_sorted[u] - center) ** 2) <= eps2
+                            return jnp.where(hit, jnp.minimum(bb, parent[grid.perm[u]]), bb)
+                        return cell_scan(center, grid.run_start[t], grid.run_length[t], b, step)
+
+                    return jnp.where(whole, jnp.minimum(best, cell_lab[t]), scan_cell(best))
+
+                def on_point(best):
+                    j = grid.perm[t]
+                    hit = (jnp.sum((pts_sorted[t] - center) ** 2) <= eps2) & core[j]
+                    return jnp.where(hit, jnp.minimum(best, parent[j]), best)
+
+                best = jnp.where(
+                    skip_leaf[t], best,
+                    jnp.where(leaf_is_cell[t], on_cell(best), on_point(best)))
+                return best, jnp.bool_(False)
+
+            out = traverse_sphere_stackless(bvh, center[None], eps_f, leaf_fn, jnp.int32(n))[0]
+            return jnp.where(active, out, jnp.int32(n))
+
+        m_s = jax.vmap(run)(pts_sorted, queries_mask_s)
+        return jnp.full(n, n, jnp.int32).at[grid.perm].min(jnp.where(queries_mask_s, m_s, n))
+
+    # Union queries run from EVERY core point. A head-only representative
+    # per dense cell under-merges: the one-directional min-label hook relies
+    # on the pair being seen from BOTH endpoints' queries, and a loose point
+    # within ε of a non-head member (but not of the head) is only seen from
+    # its own side — if its label is the smaller one, the cell never adopts
+    # it (regression caught by the Fig-4 ladder cross-check at n=512).
+    # DenseBox's savings are preserved where they matter: dense members skip
+    # the COUNT phase entirely and are pre-unioned, intra-cell pair tests
+    # never happen, and whole-cell hits are processed wholesale.
+    union_queries_s = core_s
+
+    def cond(state):
+        _, changed, r = state
+        return changed & (r < 64)
+
+    def body(state):
+        parent, _, r = state
+        m = min_label_pass(parent, union_queries_s)
+        m = jnp.where(core, m, n)
+        tgt = jnp.where(core, parent, n - 1)
+        upd = jnp.where(core, jnp.minimum(m, parent), parent[tgt])
+        parent2 = parent.at[tgt].min(upd)
+        parent2 = union_find.compress(parent2)
+        return parent2, jnp.any(parent2 != parent), r + 1
+
+    parent, _, rounds = jax.lax.while_loop(
+        cond, body, (union_find.compress(parent0), jnp.bool_(True), jnp.int32(0)))
+
+    # --- Border pass for non-core points. ---
+    border_s = min_label_pass(parent, ~core_s)
+    border = border_s  # already scattered back to original order
+    labels = _finish_labels(parent, border, core, n)
+    return DbscanResult(labels=labels, core_mask=core, num_rounds=rounds)

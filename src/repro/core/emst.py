@@ -1,0 +1,202 @@
+"""Euclidean minimum spanning tree (paper §3.2: ArborX's other clustering
+algorithm; Prokopenko, Sao & Lebrun-Grandié 2023b — a single-tree Borůvka
+on GPUs). The HDBSCAN* prerequisite (paper §5 future work).
+
+Borůvka rounds in pure JAX:
+  each round, every point finds its nearest neighbor in a DIFFERENT
+  component (BVH traversal pruned by the best candidate so far AND by
+  component identity), each component keeps its minimum outgoing edge
+  (scatter-min), the edges join the MST, and components merge
+  (union-find). O(log n) rounds; all shapes fixed.
+
+Component-aware pruning mirrors the paper's algorithm: a subtree whose
+leaf range lies entirely in the query's component is skipped — here
+detected via per-node component intervals recomputed each round (a node
+is skippable when every leaf below it has the query's root AND the node
+interval is degenerate)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import union_find
+from repro.core.bvh import Bvh, SENTINEL, build_bvh
+from repro.core.geometry import aabb_of_points, point_aabb_dist2
+
+__all__ = ["EmstResult", "emst"]
+
+_STACK_DEPTH = 96
+
+
+class EmstResult(NamedTuple):
+    edges: jax.Array      # (n-1, 2) int32 — MST edges (original indices)
+    weights: jax.Array    # (n-1,) float32 — euclidean lengths
+    total_weight: jax.Array
+    rounds: jax.Array
+
+
+def _node_component_intervals(bvh: Bvh, comp_sorted: jax.Array):
+    """Per-node [min, max] component id over its leaf range; a node with
+    min == max is entirely inside one component (skippable for queries from
+    that component). Computed per round with the bottom-up fixpoint."""
+    n = bvh.num_leaves
+    inf = jnp.iinfo(jnp.int32).max
+    lo0 = jnp.concatenate([jnp.full((n - 1,), inf, jnp.int32), comp_sorted])
+    hi0 = jnp.concatenate([jnp.full((n - 1,), -1, jnp.int32), comp_sorted])
+    ready0 = jnp.concatenate([jnp.zeros(n - 1, bool), jnp.ones(n, bool)])
+    ids = jnp.arange(n - 1, dtype=jnp.int32)
+
+    def cond(state):
+        return ~jnp.all(state[2])
+
+    def body(state):
+        lo, hi, ready = state
+        l, r = bvh.left_child, bvh.right_child
+        ok = ready[l] & ready[r]
+        lo = lo.at[ids].set(jnp.where(ok, jnp.minimum(lo[l], lo[r]), lo[ids]))
+        hi = hi.at[ids].set(jnp.where(ok, jnp.maximum(hi[l], hi[r]), hi[ids]))
+        ready = ready.at[ids].set(ready[ids] | ok)
+        return lo, hi, ready
+
+    lo, hi, _ = jax.lax.while_loop(cond, body, (lo0, hi0, ready0))
+    return lo, hi
+
+
+def _nearest_other_component(bvh: Bvh, points: jax.Array, comp: jax.Array):
+    """For each point, (distance², index) of the nearest point whose
+    component differs. Stack traversal with best-so-far pruning."""
+    n = bvh.num_leaves
+    comp_sorted = comp[bvh.leaf_perm]
+    clo, chi = _node_component_intervals(bvh, comp_sorted)
+
+    def one(center, my_comp):
+        stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
+
+        def cond(state):
+            return state[0] > 0
+
+        def body(state):
+            sp, stack, best_d, best_i = state
+            node = stack[sp - 1]
+            sp = sp - 1
+            is_leaf = node >= n - 1
+
+            sorted_idx = jnp.clip(node - (n - 1), 0, n - 1)
+            orig = bvh.leaf_perm[sorted_idx]
+            d_leaf = jnp.sum((points[orig] - center) ** 2)
+            hit = is_leaf & (comp[orig] != my_comp) & (d_leaf < best_d)
+            best_i = jnp.where(hit, orig, best_i)
+            best_d = jnp.where(hit, d_leaf, best_d)
+
+            node_c = jnp.clip(node, 0, n - 2)
+            l, r = bvh.left_child[node_c], bvh.right_child[node_c]
+
+            def child_push(sp, stack, child):
+                d = point_aabb_dist2(center, bvh.node_lo[child],
+                                     bvh.node_hi[child])
+                # skip: outside pruning radius, or entirely my component
+                same = (clo[child] == chi[child]) & (clo[child] == my_comp)
+                push = (~is_leaf) & (d < best_d) & ~same
+                stack = stack.at[sp].set(jnp.where(push, child, stack[sp]))
+                return sp + push.astype(jnp.int32), stack
+
+            # push far-first so the near child tightens the bound first
+            dl = point_aabb_dist2(center, bvh.node_lo[l], bvh.node_hi[l])
+            dr = point_aabb_dist2(center, bvh.node_lo[r], bvh.node_hi[r])
+            near = jnp.where(dl <= dr, l, r)
+            far = jnp.where(dl <= dr, r, l)
+            sp, stack = child_push(sp, stack, far)
+            sp, stack = child_push(sp, stack, near)
+            return sp, stack, best_d, best_i
+
+        _, _, best_d, best_i = jax.lax.while_loop(
+            cond, body, (jnp.int32(1), stack0, jnp.float32(jnp.inf),
+                         jnp.int32(-1)))
+        return best_d, best_i
+
+    return jax.vmap(one)(points, comp)
+
+
+@jax.jit
+def emst(points: jax.Array) -> EmstResult:
+    """Euclidean MST over (n, d) points via BVH-accelerated Borůvka."""
+    n = points.shape[0]
+    box = aabb_of_points(points)
+    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
+    bvh = build_bvh(points, box.lo - pad, box.hi + pad)
+
+    # buffers sized n: slot n-1 is a write-trash slot for non-kept lanes
+    # (dummy writes must never alias a real slot — scatter order is undefined)
+    edges0 = jnp.full((n, 2), -1, jnp.int32)
+    weights0 = jnp.zeros((n,), jnp.float32)
+    comp0 = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        comp, _, _, n_edges, r = state
+        return (n_edges < n - 1) & (r < 32)
+
+    def body(state):
+        comp, edges, weights, n_edges, r = state
+        d2, j = _nearest_other_component(bvh, points, comp)
+
+        # per-component minimum outgoing edge (scatter-min on packed keys):
+        # key = dist-rank-free trick: scatter-min f32 distances per root,
+        # then identify the argmin by equality (ties broken by min index).
+        INF = jnp.float32(jnp.inf)
+        best_d = jnp.full((n,), INF, jnp.float32).at[comp].min(d2)
+        is_min = (d2 <= best_d[comp]) & (j >= 0)
+        # one winner per component: the minimum point index among is_min
+        winner = jnp.full((n,), n, jnp.int32).at[
+            jnp.where(is_min, comp, n - 1)].min(
+            jnp.where(is_min, jnp.arange(n, dtype=jnp.int32), n))
+        i_sel = winner[comp]                       # per point: its comp's winner
+        picked = (jnp.arange(n) == i_sel) & is_min
+
+        # Boruvka double-counting guard: the SAME pair {i, j} is picked from
+        # both sides iff j also picked i (mutual); drop the copy whose root
+        # is larger. (Dedup must use the full pair identity — two components
+        # can legitimately pick different edges sharing an endpoint.)
+        a = jnp.where(picked, jnp.arange(n, dtype=jnp.int32), -1)
+        b = jnp.where(picked, j, -1)
+        j_safe = jnp.clip(j, 0, n - 1)
+        mutual = picked & picked[j_safe] & (j[j_safe] == jnp.arange(n)) \
+            & (comp > comp[j_safe])
+        keep = picked & ~mutual
+
+        # append kept edges into the fixed buffer via cumulative offsets;
+        # non-kept lanes write to the dedicated trash slot n-1
+        offs = jnp.cumsum(keep.astype(jnp.int32)) - 1
+        slot = jnp.where(keep, n_edges + offs, n - 1)
+        edges = edges.at[slot].set(
+            jnp.where(keep[:, None], jnp.stack([a, b], 1), edges[slot]))
+        weights = weights.at[slot].set(
+            jnp.where(keep, jnp.sqrt(d2), weights[slot]))
+        n_edges = n_edges + jnp.sum(keep.astype(jnp.int32))
+
+        # merge: union every picked edge, ITERATED to a fixpoint — a single
+        # hook+compress can lose unions when two edges scatter-min the same
+        # root, and a lost union makes the component re-pick (and re-append)
+        # the same edge next round.
+        aa, bb = jnp.clip(a, 0, n - 1), jnp.clip(b, 0, n - 1)
+
+        def m_cond(st):
+            return st[1]
+
+        def m_body(st):
+            c, _ = st
+            c2 = union_find.compress(union_find.hook_min(c, aa, bb, picked))
+            return c2, jnp.any(c2 != c)
+
+        c1 = union_find.compress(union_find.hook_min(comp, aa, bb, picked))
+        comp, _ = jax.lax.while_loop(m_cond, m_body,
+                                     (c1, jnp.any(c1 != comp)))
+        return comp, edges, weights, n_edges, r + 1
+
+    comp, edges, weights, n_edges, rounds = jax.lax.while_loop(
+        cond, body, (comp0, edges0, weights0, jnp.int32(0), jnp.int32(0)))
+    edges, weights = edges[: n - 1], weights[: n - 1]
+    return EmstResult(edges=edges, weights=weights,
+                      total_weight=jnp.sum(weights), rounds=rounds)

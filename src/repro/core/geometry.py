@@ -1,0 +1,34 @@
+"""Small geometric helpers shared by the BVH / grid / DBSCAN code."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Aabb", "aabb_of_points", "aabb_union", "point_aabb_dist2", "aabb_aabb_dist2"]
+
+
+class Aabb(NamedTuple):
+    lo: jax.Array  # (..., d)
+    hi: jax.Array  # (..., d)
+
+
+def aabb_of_points(points: jax.Array) -> Aabb:
+    return Aabb(points.min(axis=0), points.max(axis=0))
+
+
+def aabb_union(a: Aabb, b: Aabb) -> Aabb:
+    return Aabb(jnp.minimum(a.lo, b.lo), jnp.maximum(a.hi, b.hi))
+
+
+def point_aabb_dist2(p: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Squared distance from point(s) to AABB(s); 0 if inside."""
+    d = jnp.maximum(jnp.maximum(lo - p, p - hi), 0.0)
+    return jnp.sum(d * d, axis=-1)
+
+
+def aabb_aabb_dist2(lo_a: jax.Array, hi_a: jax.Array, lo_b: jax.Array, hi_b: jax.Array) -> jax.Array:
+    """Squared distance between two AABBs; 0 if overlapping."""
+    d = jnp.maximum(jnp.maximum(lo_b - hi_a, lo_a - hi_b), 0.0)
+    return jnp.sum(d * d, axis=-1)

@@ -1,0 +1,127 @@
+"""Morton (Z-order) codes for spatial sorting.
+
+The paper (§4.2.2) shows that 32-bit Morton codes (10 bits/dim in 3D) collapse
+for clustered scientific data — 64% of the benchmark points shared a code —
+and that moving to 64-bit codes (21 bits/dim) removes nearly all duplicates.
+
+JAX runs with 32-bit integers by default (x64 disabled), so 64-bit codes are
+represented as a ``(hi, lo)`` pair of uint32 with lexicographic ordering —
+bit-identical ordering to a native uint64 sort.
+
+Bit layout of the 63-bit 3D code (x is the *highest* interleaved bit, matching
+the usual ``expand(x) << 2 | expand(y) << 1 | expand(z)`` convention):
+
+  bits  0..29 : interleave of coordinate bits 0..9
+  bits 30..59 : interleave of coordinate bits 10..19
+  bits 60..62 : coordinate bits 20 (z at 60, y at 61, x at 62)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+__all__ = [
+    "normalize_points",
+    "morton32",
+    "morton64",
+    "sort_by_morton32",
+    "sort_by_morton64",
+    "common_prefix_length32",
+    "common_prefix_length64",
+]
+
+
+def normalize_points(points: jax.Array, scene_min: jax.Array, scene_max: jax.Array) -> jax.Array:
+    """Map points into [0, 1)^d given the scene bounding box."""
+    extent = jnp.maximum(scene_max - scene_min, jnp.finfo(points.dtype).tiny)
+    unit = (points - scene_min) / extent
+    # Clamp so that max-corner points stay inside the last bin.
+    return jnp.clip(unit, 0.0, 1.0 - jnp.finfo(points.dtype).eps)
+
+
+def _expand_bits_10(v: jax.Array) -> jax.Array:
+    """Spread the low 10 bits of ``v``: bit i -> bit 3i (classic magic numbers)."""
+    v = v.astype(U32) & U32(0x3FF)
+    v = (v * U32(0x00010001)) & U32(0xFF0000FF)
+    v = (v * U32(0x00000101)) & U32(0x0F00F00F)
+    v = (v * U32(0x00000011)) & U32(0xC30C30C3)
+    v = (v * U32(0x00000005)) & U32(0x49249249)
+    return v
+
+
+def _interleave10(x: jax.Array, y: jax.Array, z: jax.Array) -> jax.Array:
+    """30-bit interleave of three 10-bit integers; x occupies the high bit of
+    each 3-bit group."""
+    return (_expand_bits_10(x) << 2) | (_expand_bits_10(y) << 1) | _expand_bits_10(z)
+
+
+def morton32(unit_points: jax.Array) -> jax.Array:
+    """32-bit (30 used) Morton codes for points in [0,1)^3. Shape (n,3)->(n,)."""
+    q = jnp.floor(unit_points * 1024.0).astype(jnp.int32)
+    q = jnp.clip(q, 0, 1023).astype(U32)
+    return _interleave10(q[..., 0], q[..., 1], q[..., 2])
+
+
+def morton64(unit_points: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """63-bit Morton codes for points in [0,1)^3 as a (hi, lo) uint32 pair.
+
+    21 bits per dimension. float32 has a 24-bit mantissa so quantization to
+    2^21 bins is exact for unit-interval inputs.
+    """
+    q = jnp.floor(unit_points * float(1 << 21)).astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+    # Without x64, 2^21-1 = 2097151 fits int32 comfortably.
+    q = jnp.clip(q, 0, (1 << 21) - 1).astype(U32)
+    x, y, z = q[..., 0], q[..., 1], q[..., 2]
+
+    low = _interleave10(x & U32(0x3FF), y & U32(0x3FF), z & U32(0x3FF))          # bits 0..29
+    mid = _interleave10((x >> 10) & U32(0x3FF), (y >> 10) & U32(0x3FF), (z >> 10) & U32(0x3FF))  # bits 30..59
+    top = (((x >> 20) & U32(1)) << 2) | (((y >> 20) & U32(1)) << 1) | ((z >> 20) & U32(1))       # bits 60..62
+
+    lo = low | (mid << 30)                      # mid bits 0..1 land at 30..31
+    hi = (mid >> 2) | (top << 28)               # mid bits 2..29 at 0..27, top at 28..30
+    return hi, lo
+
+
+def sort_by_morton32(codes: jax.Array) -> jax.Array:
+    """Stable argsort of 32-bit codes (ties keep index order => deterministic)."""
+    return jnp.argsort(codes, stable=True)
+
+
+def sort_by_morton64(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Stable lexicographic argsort of (hi, lo) uint32 pairs."""
+    return jnp.lexsort((lo, hi))
+
+
+def common_prefix_length32(codes: jax.Array, i: jax.Array, j: jax.Array) -> jax.Array:
+    """Karras' delta operator for 32-bit codes with index tie-breaking.
+
+    Returns the length of the common bit prefix of codes[i], codes[j]; when
+    the codes are equal, returns 32 + clz(i ^ j) so equal-code runs still form
+    a balanced hierarchy. Out-of-range j yields -1 (Karras convention).
+    """
+    n = codes.shape[0]
+    valid = (j >= 0) & (j < n)
+    j_safe = jnp.clip(j, 0, n - 1)
+    ci, cj = codes[i], codes[j_safe]
+    x = ci ^ cj
+    idx_x = (i.astype(U32) ^ j_safe.astype(U32))
+    d = jnp.where(x != 0, jax.lax.clz(x), U32(32) + jax.lax.clz(idx_x))
+    return jnp.where(valid, d.astype(jnp.int32), -1)
+
+
+def common_prefix_length64(hi: jax.Array, lo: jax.Array, i: jax.Array, j: jax.Array) -> jax.Array:
+    """delta for 63-bit (hi, lo) codes with index tie-breaking (≤ 96 bits)."""
+    n = hi.shape[0]
+    valid = (j >= 0) & (j < n)
+    j_safe = jnp.clip(j, 0, n - 1)
+    xh = hi[i] ^ hi[j_safe]
+    xl = lo[i] ^ lo[j_safe]
+    idx_x = (i.astype(U32) ^ j_safe.astype(U32))
+    d = jnp.where(
+        xh != 0,
+        jax.lax.clz(xh),
+        jnp.where(xl != 0, U32(32) + jax.lax.clz(xl), U32(64) + jax.lax.clz(idx_x)),
+    )
+    return jnp.where(valid, d.astype(jnp.int32), -1)

@@ -1,0 +1,92 @@
+"""Pure-numpy DBSCAN oracle used by every correctness test.
+
+Direct transliteration of Ester et al. (1996) semantics as restated in the
+paper §3.1 (note: the ε-neighborhood INCLUDES the point itself, so an
+isolated point has |N| = 1 and FOF is exactly minPts = 2):
+
+* core:    |N_eps(x)| >= minPts
+* cluster: connected components of the core-core ε-graph
+* border:  non-core with >= 1 core ε-neighbor (joins one such cluster;
+           which one is implementation-defined — tests compare cluster
+           PARTITIONS on cores and membership-validity on borders)
+* noise:   label -1
+
+O(n^2); keep n small in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NOISE = -1
+
+__all__ = ["dbscan_ref", "NOISE", "core_mask_ref", "labels_equivalent"]
+
+
+def _neighbor_matrix(points: np.ndarray, eps: float) -> np.ndarray:
+    # float32 end to end, matching the JAX tiers' comparison semantics
+    # (points exactly at distance eps are knife-edge under any float order).
+    pts = points.astype(np.float32)
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1, dtype=np.float32)
+    return d2 <= np.float32(eps) ** 2
+
+
+def core_mask_ref(points: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
+    return _neighbor_matrix(points, eps).sum(1) >= min_pts
+
+
+def dbscan_ref(points: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
+    n = len(points)
+    adj = _neighbor_matrix(points, eps)
+    core = adj.sum(1) >= min_pts
+
+    labels = np.full(n, NOISE, np.int64)
+    # Union-find over core-core edges.
+    parent = np.arange(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    cu, cv = np.nonzero(adj & core[:, None] & core[None, :])
+    for a, b in zip(cu, cv):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    for i in range(n):
+        if core[i]:
+            labels[i] = find(i)
+    # Border points: min core-neighbor root (deterministic choice).
+    for i in range(n):
+        if not core[i]:
+            roots = [find(j) for j in np.nonzero(adj[i] & core)[0]]
+            labels[i] = min(roots) if roots else NOISE
+    return labels
+
+
+def labels_equivalent(a: np.ndarray, b: np.ndarray, core: np.ndarray,
+                      adj_eps=None) -> bool:
+    """Partition equality on CORE points + same noise set. Border points may
+    legally differ between implementations (they join ANY adjacent cluster),
+    so borders are only checked for 'joined a cluster at all'."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if ((a == NOISE) != (b == NOISE)).any():
+        return False
+    # Compare partitions restricted to core points.
+    ca, cb = a[core], b[core]
+    # map labels -> canonical ids by first occurrence
+    def canon(x):
+        _, inv = np.unique(x, return_inverse=True)
+        first = {}
+        out = np.empty(len(x), np.int64)
+        k = 0
+        for i, v in enumerate(inv):
+            if v not in first:
+                first[v] = k
+                k += 1
+            out[i] = first[v]
+        return out
+
+    return bool((canon(ca) == canon(cb)).all())

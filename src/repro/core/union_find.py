@@ -1,0 +1,85 @@
+"""Deterministic parallel union-find / connected components (paper §4.3, C8).
+
+ArborX fuses an ECL-CC-style union-find (atomic CAS hooking) into traversal.
+TPUs have no atomic CAS visible to XLA, so we use the other classic member of
+the same family: **min-label hooking + pointer jumping** (Shiloach-Vishkin).
+It is deterministic (scatter-min is order-independent), collective-friendly,
+and converges in O(log n) hook/jump rounds on the forests produced here.
+
+Two interfaces:
+* ``connected_components(n, u, v, mask)`` — explicit edge list (the paper's
+  pre-callback baseline, §4.3.1).
+* ``hook_min`` / ``compress`` primitives — used by the fused FDBSCAN paths,
+  where each round's candidate edges come straight from a traversal callback
+  (never materialized globally).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "hook_min", "connected_components", "canonicalize"]
+
+
+def compress(parent: jax.Array, rounds: int | None = None) -> jax.Array:
+    """Full path compression: parent <- parent[parent] until fixpoint."""
+
+    def cond(state):
+        p, changed = state
+        return changed
+
+    def body(state):
+        p, _ = state
+        p2 = p[p]
+        return p2, jnp.any(p2 != p)
+
+    # peel one iteration so the carry types (incl. shard_map varying-manual
+    # -axes, jax >= 0.8) are body-derived by construction
+    p1 = parent[parent]
+    changed0 = jnp.any(p1 != parent)
+    parent, _ = jax.lax.while_loop(cond, body, (p1, changed0))
+    return parent
+
+
+def hook_min(parent: jax.Array, u: jax.Array, v: jax.Array, mask: jax.Array) -> jax.Array:
+    """One deterministic hooking round: for every masked edge (u, v), hook the
+    larger root under the smaller. Roots are approximated by current labels
+    (callers interleave with ``compress``)."""
+    n = parent.shape[0]
+    pu = parent[u]
+    pv = parent[v]
+    lo = jnp.minimum(pu, pv)
+    hi_ = jnp.maximum(pu, pv)
+    lo = jnp.where(mask, lo, n)  # out-of-range min is a no-op via clip target
+    hi_safe = jnp.where(mask, hi_, 0)
+    # parent[hi] <- min(parent[hi], lo): scatter-min is deterministic.
+    parent = parent.at[hi_safe].min(jnp.where(mask, lo, parent[hi_safe]))
+    return parent
+
+
+def connected_components(n: int, u: jax.Array, v: jax.Array,
+                         mask: jax.Array | None = None) -> jax.Array:
+    """Labels in [0, n): each vertex gets the min vertex id of its component."""
+    if mask is None:
+        mask = jnp.ones(u.shape, bool)
+    parent0 = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        parent, _ = state
+        p2 = hook_min(parent, u, v, mask)
+        p2 = compress(p2)
+        return p2, jnp.any(p2 != parent)
+
+    # peel one iteration: carry types become body-derived (shard_map vma)
+    first, changed0 = body((parent0, jnp.bool_(True)))
+    parent, _ = jax.lax.while_loop(cond, body, (first, changed0))
+    return parent
+
+
+def canonicalize(labels: jax.Array) -> jax.Array:
+    """Fully compress an arbitrary label-pointer array into root labels."""
+    return compress(labels.astype(jnp.int32))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spot — ε-neighborhood
+queries with fused callbacks (DESIGN.md §2): `pairwise.py` (pl.pallas_call
++ BlockSpec kernels), `ops.py` (jit'd padded wrappers), `ref.py` (pure-jnp
+oracles for the allclose sweeps in tests/test_kernels.py)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every kernel in this package (no Pallas).
+
+Each function mirrors the exact contract of its `pairwise.py` counterpart,
+including padding semantics, so tests can sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pairwise import SENTINEL_LABEL
+
+__all__ = [
+    "pairwise_count_ref",
+    "pairwise_min_label_ref",
+    "stencil_count_ref",
+    "stencil_min_label_ref",
+]
+
+
+def _dist2(x, y):
+    return jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+
+
+def pairwise_count_ref(x, y, eps2):
+    return jnp.sum(_dist2(x, y) <= eps2, axis=1).astype(jnp.int32)
+
+
+def pairwise_min_label_ref(x, y, labels, core, eps2):
+    ok = (_dist2(x, y) <= eps2) & core[None, :]
+    cand = jnp.where(ok, labels[None, :], SENTINEL_LABEL)
+    return jnp.min(cand, axis=1).astype(jnp.int32)
+
+
+def stencil_count_ref(cell_pts, nbr_map, eps2):
+    ncells, s = nbr_map.shape
+    counts = jnp.zeros(cell_pts.shape[:2], jnp.int32)[: ncells]
+    for j in range(s):
+        cand = cell_pts[nbr_map[:, j]]                     # (ncells, C, D)
+        d2 = jnp.sum((cell_pts[:ncells, :, None, :] - cand[:, None, :, :]) ** 2, -1)
+        counts = counts + jnp.sum(d2 <= eps2, axis=2).astype(jnp.int32)
+    return counts
+
+
+def stencil_min_label_ref(cell_pts, cell_labels, cell_core, nbr_map, eps2):
+    ncells, s = nbr_map.shape
+    out = jnp.full(cell_pts.shape[:2], SENTINEL_LABEL, jnp.int32)[: ncells]
+    for j in range(s):
+        nb = nbr_map[:, j]
+        cand = cell_pts[nb]
+        d2 = jnp.sum((cell_pts[:ncells, :, None, :] - cand[:, None, :, :]) ** 2, -1)
+        ok = (d2 <= eps2) & cell_core[nb][:, None, :]
+        lab = jnp.where(ok, cell_labels[nb][:, None, :], SENTINEL_LABEL)
+        out = jnp.minimum(out, jnp.min(lab, axis=2))
+    return out

@@ -1,0 +1,58 @@
+"""Per-cell perf diagnostics for the hillclimb loop:
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch qwen3-moe-235b-a22b \
+      --shape train_4k [--mesh single] [--sp]
+
+Prints the memory-model breakdown and the top loop-multiplied collectives
+(the dry-run "profile" — DESIGN.md §6.5 / Pallas hints: the profile is the
+lowered IR, not a wall-clock trace).
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main() -> None:
+    from repro.configs import ARCH_IDS, SHAPES, get_config
+    from repro.launch import dryrun as dr
+    from repro.launch.hlo_cost import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=tuple(SHAPES), required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    dr._set_constraints(mesh, shape, args.sp, cfg)
+    _, mem, hlo = dr._lower_compile(cfg, shape, mesh)
+    dr._set_constraints(mesh, shape, False)
+
+    res = analyze_hlo(hlo, top_k=args.top)
+    mm = dr.memory_model(cfg, shape, mesh)
+    print("memory model (GB):", json.dumps(
+        {k: round(v / 1e9, 3) if isinstance(v, float) else v
+         for k, v in mm.items()}, indent=1))
+    print(f"flops/dev: {res['flops'] / 1e12:.1f} T   "
+          f"traffic/dev: {res['traffic'] / 1e9:.1f} GB   "
+          f"collectives/dev: {res['coll']['total'] / 1e9:.1f} GB")
+    print("top collectives (loop-multiplied, per device):")
+    for item in res["top_collectives"]:
+        print(f"  {item['gbytes']:9.2f} GB  {item['op']:19s} {item['shape']}")
+
+
+if __name__ == "__main__":
+    main()

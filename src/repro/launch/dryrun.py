@@ -1,0 +1,615 @@
+"""Multi-pod dry-run (deliverable (e)) + roofline extraction (deliverable (g)).
+
+For every (architecture x input shape x mesh) cell this:
+  1. builds abstract inputs (ShapeDtypeStruct — zero allocation at any size),
+  2. jit-lowers + compiles the step (train_step / prefill_step / serve_step)
+     against the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  3. records memory_analysis() (fits-in-HBM proof), cost_analysis() (FLOPs /
+     bytes), and the collective-bytes breakdown parsed from the SPMD HLO,
+  4. derives the three roofline terms against TPU v5e constants.
+
+CLI:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs N]
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+from __future__ import annotations
+
+# The 512 placeholder devices MUST be configured before jax initializes —
+# first lines of the module, before any jax import (per the dry-run contract).
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps
+from repro.models import lm
+from repro.models.spec import abstract_params, count_params
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# --- TPU v5e roofline constants (per chip) ----------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)\[([\d,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op type, from result shapes.
+    all-reduce counted 2x (reduce-scatter + all-gather equivalent)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        if op == "all-reduce":
+            b *= 2
+        out[op] = out.get(op, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per cell
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one cell (tokens/labels or decode state)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32),
+                 "loss_mask": _sds((b, s), jnp.bool_)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    else:  # decode: one token against an S-token cache
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    if cfg.frontend_dim and not cfg.encoder_layers:
+        batch["vision"] = _sds((b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.encoder_layers:
+        batch["frames"] = _sds((b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    return batch
+
+
+def _abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, batch, cache_len))
+    return jax.tree.map(lambda x: _sds(x.shape, x.dtype), cache)
+
+
+def sharded_param_bytes(cfg: ModelConfig, mesh) -> float:
+    """Exact per-device parameter bytes (bf16) under the sharding rules."""
+    import jax.tree_util as jtu
+    spec = lm.model_spec(cfg)
+    leaves = jtu.tree_leaves(spec, is_leaf=lambda x: hasattr(x, "axes"))
+    return sum(int(np.prod(l.shape)) * 2 / _shard_factor(l, mesh)
+               for l in leaves)
+
+
+def train_plan(cfg: ModelConfig, shape: ShapeConfig, mesh, sp: bool = False) -> dict:
+    """Shared training-memory plan: gradient dtype and accumulation factor,
+    derived from the exact sharded state footprint (used by build_cell AND
+    memory_model so the dry-run measures what it models).
+
+    * grads accumulate in bf16 when the f32 accumulator would push
+      params+moments+grads past 12 GB/device (jamba-398B on one pod);
+    * the scan-carry budget is what's left of HBM after state+slack.
+    """
+    params_b = sharded_param_bytes(cfg, mesh)
+    state_f32g = params_b * (1 + 2 + 2)          # p + m/v bf16 + f32 grads
+    grad_dtype = "bfloat16" if state_f32g > 12e9 else "float32"
+    grad_b = params_b * (1 if grad_dtype == "bfloat16" else 2)
+    state_b = params_b * 3 + grad_b
+    carry_budget = float(np.clip(15e9 - state_b, 1e9, 4e9))
+
+    sizes = dict(mesh.shape)
+    dp = int(np.prod([sizes[a] for a in ("pod", "data") if a in sizes]))
+    rows_total = max(shape.global_batch // dp, 1)
+    carry_per_row = cfg.n_groups * shape.seq_len * cfg.d_model * 2
+    if cfg.encoder_layers:  # enc-dec: encoder scan carries count too
+        carry_per_row += cfg.encoder_layers * cfg.frontend_tokens * cfg.d_model * 2
+    if any(k.startswith(("mlstm", "slstm")) for k in cfg.block_pattern):
+        # xLSTM gate preactivations (4 per block) dominate the carry
+        carry_per_row += 4 * shape.seq_len * cfg.n_heads * cfg.resolved_head_dim * 4
+    if sp and shape.seq_len % sizes.get("model", 1) == 0:
+        carry_per_row /= sizes.get("model", 1)  # seq-sharded saved carries
+    rows = max(1, min(rows_total, int(carry_budget // max(carry_per_row, 1))))
+    accum = 1
+    while rows_total // accum > rows and rows_total % (accum * 2) == 0:
+        accum *= 2
+    return {"accum": accum, "rows": rows_total // accum,
+            "grad_dtype": grad_dtype, "params_b": params_b,
+            "carry_budget": carry_budget}
+
+
+SP_MODE = False  # set by run_cell/diagnose; threads --sp into the plan
+
+
+def accum_steps_for(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    return train_plan(cfg, shape, mesh, sp=SP_MODE)["accum"]
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, args, in_shardings, out_shardings) ready to lower."""
+    params = abstract_params(lm.model_spec(cfg), jnp.bfloat16)
+    p_shard = shd.param_shardings(lm.model_spec(cfg), mesh)
+    batch = input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        plan = train_plan(cfg, shape, mesh, sp=SP_MODE)
+        accum = plan["accum"]
+        opt_cfg = adamw.OptConfig(accum_steps=accum,
+                                  grad_dtype=plan["grad_dtype"])
+        opt = adamw.abstract_opt_state(opt_cfg, params)
+        o_shard = adamw.OptState(step=repl,
+                                 m=jax.tree.map(lambda s: s, p_shard),
+                                 v=jax.tree.map(lambda s: s, p_shard),
+                                 error=None)
+        state = steps.TrainState(params, opt)
+        s_shard = steps.TrainState(p_shard, o_shard)
+
+        if accum > 1:  # micro-batch leading axis: (accum, B/accum, ...)
+            batch = jax.tree.map(
+                lambda x: _sds((accum, x.shape[0] // accum) + x.shape[1:],
+                               x.dtype), batch)
+            b_shard = jax.tree.map(
+                lambda x: NamedSharding(
+                    mesh, P(None, *shd.data_pspec(mesh, x.shape[1],
+                                                  len(x.shape) - 1))),
+                batch)
+
+            def fn(st, bt):
+                return steps.train_step_accum(st, bt, cfg=cfg, opt_cfg=opt_cfg,
+                                              param_shardings=p_shard)
+        else:
+            b_shard = jax.tree.map(
+                lambda x: NamedSharding(mesh, shd.data_pspec(
+                    mesh, x.shape[0], len(x.shape))), batch)
+
+            def fn(st, bt):
+                return steps.train_step(st, bt, cfg=cfg, opt_cfg=opt_cfg)
+
+        # donate the train state: params/opt update in place (aliased)
+        return fn, (state, batch), (s_shard, b_shard), (0,)
+
+    if shape.kind == "prefill":
+        b_shard = jax.tree.map(
+            lambda x: NamedSharding(mesh, shd.data_pspec(
+                mesh, x.shape[0], len(x.shape))), batch)
+
+        def fn(p, bt):
+            return steps.prefill_step(p, bt, cfg=cfg, cache_len=shape.seq_len)
+
+        return fn, (params, batch), (p_shard, b_shard), ()
+
+    # decode
+    cache = _abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_shard = shd.cache_shardings(cache, mesh)
+    token = batch["tokens"]
+    t_shard = NamedSharding(mesh, shd.data_pspec(mesh, shape.global_batch, 2))
+    pos = _sds((), jnp.int32)
+
+    def fn(p, c, t, pp):
+        return steps.serve_step(p, c, t, pp, cfg=cfg)
+
+    # donate the cache: decode updates it in place (aliased in+out)
+    return fn, (params, cache, token, pos), (p_shard, c_shard, t_shard, repl), (1,)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def _shard_factor(spec, mesh) -> int:
+    sizes = dict(mesh.shape)
+    pspec = shd.pspec_for(spec, mesh)
+    f = 1
+    for entry in pspec:
+        if entry is None:
+            continue
+        for ax in ((entry,) if isinstance(entry, str) else entry):
+            f *= sizes[ax]
+    return f
+
+
+def memory_model(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """Analytic per-device HBM model at TRUE dtypes (bf16 weights/activations,
+    f32 where the program deliberately uses f32). Needed because the CPU
+    backend's float normalization upcasts every bf16 dot to f32, so
+    XLA buffer totals over-report by up to 2x vs the TPU target; the XLA
+    number is reported alongside as an upper bound."""
+    import jax.tree_util as jtu
+    sizes = dict(mesh.shape)
+    model = sizes.get("model", 1)
+    dp = int(np.prod([sizes[a] for a in ("pod", "data") if a in sizes]))
+    spec = lm.model_spec(cfg)
+    leaves = jtu.tree_leaves(spec, is_leaf=lambda x: hasattr(x, "axes"))
+    params_b = sum(int(np.prod(l.shape)) * 2 / _shard_factor(l, mesh)
+                   for l in leaves)
+
+    s, b = shape.seq_len, shape.global_batch
+    d, hq = cfg.d_model, cfg.n_heads
+    # score sharding mirror of default_score_pspec: heads over model when
+    # divisible, else query-seq over model
+    if hq % model == 0:
+        h_loc, sq_div = hq / model, 1
+    else:
+        h_loc, sq_div = hq, model
+    out: dict = {"params": params_b}
+
+    if shape.kind == "train":
+        plan = train_plan(cfg, shape, mesh, sp=SP_MODE)
+        accum = plan["accum"]
+        rows = max(b // dp // accum, 1)
+        out["opt_moments"] = 2 * params_b               # bf16 m+v
+        out["grads"] = params_b * (1 if plan["grad_dtype"] == "bfloat16" else 2)
+        carry = cfg.n_groups * rows * s * d * 2
+        if cfg.encoder_layers:
+            carry += cfg.encoder_layers * rows * cfg.frontend_tokens * d * 2
+        out["scan_carries"] = carry
+        transients = []
+        kinds = {k.removesuffix("_moe") for k in cfg.block_pattern}
+        if kinds & {"attn", "attn_local", "cross"}:
+            from repro.models.attention import CHUNKED_THRESHOLD, KV_CHUNK, Q_CHUNK
+            if s >= CHUNKED_THRESHOLD:  # blockwise attention tiles
+                transients.append(
+                    2.5 * rows * h_loc * (Q_CHUNK / sq_div) * KV_CHUNK * 4)
+            else:
+                transients.append(2.5 * rows * h_loc * (s / sq_div) * s * 4)
+        if cfg.is_moe:
+            tg = min(cfg.moe_group_size, rows * s)
+            g_loc = rows * s // tg
+            cap = max(1, min(int(cfg.capacity_factor * tg * cfg.top_k
+                                 / cfg.n_experts), tg))
+            e_loc = max(cfg.n_experts // model, 1)
+            disp = g_loc * tg * e_loc * cap * 2
+            buf = g_loc * e_loc * cap * d * 2
+            transients.append(2.5 * (2 * disp + 2 * buf))
+        if "mamba" in kinds:
+            di_loc = cfg.ssm_expand * d / model
+            transients.append(
+                3 * rows * cfg.ssm_chunk * di_loc * cfg.ssm_state * 4)
+        if kinds & {"mlstm", "slstm"}:
+            hd = cfg.resolved_head_dim
+            transients.append(3 * rows * hq * max(cfg.ssm_chunk ** 2,
+                                                  hd * hd) * 4)
+            transients.append(4 * rows * s * hq * hd * 4)          # gate preacts
+        pv = cfg.padded_vocab
+        v_loc = pv / model if pv % model == 0 else pv
+        transients.append(2 * rows * lm.LOSS_CHUNK * v_loc * 4)    # loss chunk
+        out["transient_peak"] = max(transients)
+    else:
+        cache = jax.eval_shape(lambda: lm.init_cache(
+            cfg, shape.global_batch, shape.seq_len))
+        cache_b = 0.0
+        for leaf in jax.tree.leaves(cache):
+            pspec = shd.cache_pspec(mesh, tuple(leaf.shape))
+            f = 1
+            for entry in pspec:
+                if entry is None:
+                    continue
+                for ax in ((entry,) if isinstance(entry, str) else entry):
+                    f *= sizes[ax]
+            cache_b += int(np.prod(leaf.shape)) * leaf.dtype.itemsize / f
+        out["kv_cache"] = cache_b
+        rows = max(b // dp, 1)
+        if shape.kind == "prefill":
+            out["activations"] = 4 * rows * s * d * 2
+            if {k.removesuffix("_moe") for k in cfg.block_pattern} & \
+                    {"attn", "attn_local", "cross"}:
+                from repro.models.attention import (CHUNKED_THRESHOLD,
+                                                    KV_CHUNK, Q_CHUNK)
+                if s >= CHUNKED_THRESHOLD:
+                    out["transient_peak"] = \
+                        2 * rows * h_loc * (Q_CHUNK / sq_div) * KV_CHUNK * 4
+                else:
+                    out["transient_peak"] = 2 * rows * h_loc * (s / sq_div) * s * 4
+        else:
+            # decode: per-token scores (B, H, 1, S/model) f32 + output logits
+            out["activations"] = 4 * rows * d * 2
+            out["transient_peak"] = 2 * rows * hq * (s / model) * 4
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    out["fits_16GB"] = bool(out["total"] < 16e9)
+    return {k: (float(v) if not isinstance(v, bool) else v)
+            for k, v in out.items()}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic 'useful' FLOPs per device: 6·N_active·D (train) or 2·N_active·D
+    (inference), D = global tokens, divided by chip count at report time."""
+    n_total = count_params(lm.model_spec(cfg))
+    if cfg.is_moe:
+        # active = total - (inactive expert fraction of routed expert params)
+        e, k = cfg.n_experts, cfg.top_k
+        spec = lm.model_spec(cfg)
+        import jax.tree_util as jtu
+        routed = 0
+        for path, leaf in jtu.tree_leaves_with_path(spec, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes")):
+            if "moe" in jtu.keystr(path) and "shared" not in jtu.keystr(path) \
+                    and "router" not in jtu.keystr(path):
+                routed += int(np.prod(leaf.shape))
+        n_active = n_total - routed * (1 - k / e)
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens
+
+
+def roofline(cost: dict, coll: dict, n_chips: int, cfg, shape) -> dict:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total", 0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"), (t_coll, "collective"))[1]
+    mf = model_flops(cfg, shape) / n_chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / flops_dev if flops_dev else None,
+        "step_time_bound_s": max(t_compute, t_memory, t_coll),
+        "mfu_bound": mf / PEAK_FLOPS / max(t_compute, t_memory, t_coll)
+        if max(t_compute, t_memory, t_coll) > 0 else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def _set_constraints(mesh, shape: ShapeConfig, sp: bool,
+                     cfg: ModelConfig | None = None):
+    global SP_MODE
+    SP_MODE = sp
+    """Score sharding is ALWAYS pinned for non-decode shapes: GSPMD cannot
+    propagate head-sharding through the GQA broadcast+reshape, and
+    unconstrained (B, H, S, S) scores replicate (~43GB/layer at 4k).
+    The Megatron-SP pair (seq-sharded residuals + gathered attention inputs)
+    is the optional --sp experiment."""
+    if shape.kind != "decode":
+        shd.set_score_pspec(shd.default_score_pspec(
+            mesh, cfg.n_heads if cfg is not None else None))
+        shd.set_block_input_pspec(shd.default_attn_input_pspec(mesh))
+        shd.set_decode_score_pspec(None)
+    else:
+        shd.set_score_pspec(None)
+        shd.set_block_input_pspec(None)
+        # flash-decode: scores sharded over KV-seq; never gather the cache
+        shd.set_decode_score_pspec(shd.decode_score_pspec(mesh))
+    if sp and shape.kind != "decode":
+        seq_ok = shape.seq_len % dict(mesh.shape).get("model", 1) == 0
+        shd.set_activation_pspec(shd.default_activation_pspec(mesh, seq_ok))
+        shd.set_attn_input_pspec(shd.default_attn_input_pspec(mesh))
+    else:
+        shd.set_activation_pspec(None)
+        shd.set_attn_input_pspec(None)
+
+
+OP_LINE_RE = re.compile(r"^\s+%?[\w.\-]+ = ")
+SKIP_OPS = re.compile(r"\b(parameter|constant|get-tuple-element|tuple|bitcast"
+                      r"|copy-start|copy-done)\(")
+
+
+def hlo_traffic_bytes(hlo_text: str) -> float:
+    """True-dtype HBM-traffic proxy: sum of op OUTPUT bytes x2 (read+write
+    amortized), skipping no-op/aliasing ops. XLA's own 'bytes accessed' is
+    unusable here: the CPU backend's float normalization upcasts every bf16
+    dot to f32 first (2x inflation that would not exist on TPU)."""
+    total = 0
+    for line in hlo_text.splitlines():
+        if not OP_LINE_RE.match(line) or SKIP_OPS.search(line):
+            continue
+        head = line.split("=", 1)[1].lstrip()
+        shape_txt = head.split(" ", 1)[0]
+        total += _shape_bytes(shape_txt)
+    return float(total * 2)
+
+
+def _spmd_hlo(lowered, compiled_dir: str) -> str:
+    """Read the after-spmd-partitioning HLO (true dtypes) from the dump."""
+    import glob
+    cands = sorted(glob.glob(os.path.join(compiled_dir,
+                                          "*after_spmd-partitioning*.txt")))
+    if not cands:
+        raise RuntimeError(f"no spmd dump in {compiled_dir}")
+    return open(cands[-1]).read()
+
+
+def _lower_compile(cfg, shape, mesh):
+    """Compile once (rolled scans = production GSPMD decisions); cost terms
+    come from the loop-aware HLO walker over the post-SPMD dump (true
+    dtypes, while bodies multiplied by their trip counts)."""
+    import tempfile
+    from repro.launch.hlo_cost import analyze_hlo
+    fn, args, in_sh, donate = build_cell(cfg, shape, mesh)
+    dump_dir = tempfile.mkdtemp(prefix="dryrun_hlo_")
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh,
+                         donate_argnums=donate if donate else ())
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile(compiler_options={
+            "xla_dump_to": dump_dir,
+            "xla_dump_hlo_pass_re": "spmd-partitioning",
+        })
+        cost = dict(compiled.cost_analysis())
+        mem = compiled.memory_analysis()
+    hlo = _spmd_hlo(lowered, dump_dir)
+    import shutil
+    shutil.rmtree(dump_dir, ignore_errors=True)
+    walked = analyze_hlo(hlo)
+    metrics = {
+        "flops": walked["flops"],
+        "bytes": walked["traffic"],
+        "coll": walked["coll"],
+        "xla_flops_uncorrected": float(cost.get("flops", 0.0)),
+    }
+    return metrics, mem, hlo
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+             activation_sharding: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = int(np.prod(mesh.devices.shape))
+    sp = activation_sharding or (cfg.prefer_sp and shape.kind == "train")
+    _set_constraints(mesh, shape, sp, cfg)
+
+    # full-depth rolled compile: memory + compile sanity + loop-aware costs.
+    t0 = time.time()
+    rolled, mem, hlo = _lower_compile(cfg, shape, mesh)
+    t_full = time.time() - t0
+    _set_constraints(mesh, shape, False)
+
+    cost = {"flops": rolled["flops"], "bytes accessed": rolled["bytes"]}
+    coll = dict(rolled["coll"])
+
+    mem_total = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    mm = memory_model(cfg, shape, mesh)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": f"{mesh.devices.shape}",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "full_compile_s": round(t_full, 1),
+        "xla_flops_uncorrected": rolled["xla_flops_uncorrected"],
+        "memory": {
+            # XLA CPU buffer totals: UPPER BOUND (float normalization runs
+            # every bf16 dot in f32 on this backend; TPU keeps bf16).
+            "xla_cpu_upper_bound": mem_total,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # analytic true-dtype model (see memory_model docstring):
+            "model": mm,
+            "total_per_dev": mm["total"],
+            "fits_16GB": mm["fits_16GB"],
+        },
+        "cost_rolled": rolled,
+        "collectives": coll,
+        "roofline": roofline(cost, coll, n_chips, cfg, shape),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    out_path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    # Megatron-SP experiment knob (hillclimb lever; measured slower+bigger
+    # under GSPMD on these models — see EXPERIMENTS.md §Perf):
+    ap.add_argument("--sp", action="store_true",
+                    help="seq-shard activations + constrain scores")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    if args.all:
+        # Orchestrate subprocesses (each needs its own XLA device-count init).
+        import subprocess
+        cells = []
+        for arch in ARCH_IDS:
+            for shape in shapes_for(get_config(arch)):
+                for mesh in (("single", "multi") if args.mesh == "both" else (args.mesh,)):
+                    target = out_dir / f"{arch}__{shape.name}__{mesh}.json"
+                    if not target.exists():
+                        cells.append((arch, shape.name, mesh))
+        print(f"{len(cells)} cells to run")
+        running: list[tuple[subprocess.Popen, tuple]] = []
+        failures = []
+        while cells or running:
+            while cells and len(running) < args.jobs:
+                cell = cells.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", cell[0], "--shape", cell[1], "--mesh", cell[2],
+                       "--out", str(out_dir)]
+                if args.sp:
+                    cmd.append("--sp")
+                running.append((subprocess.Popen(cmd), cell))
+            done = [(p, c) for p, c in running if p.poll() is not None]
+            running = [(p, c) for p, c in running if p.poll() is None]
+            for p, c in done:
+                status = "ok" if p.returncode == 0 else f"FAIL rc={p.returncode}"
+                print(f"[{time.strftime('%H:%M:%S')}] {c} -> {status}", flush=True)
+                if p.returncode != 0:
+                    failures.append(c)
+            time.sleep(2)
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    res = run_cell(args.arch, args.shape, args.mesh, out_dir,
+                   activation_sharding=args.sp)
+    r = res["roofline"]
+    print(json.dumps({
+        "cell": f"{args.arch} x {args.shape} x {args.mesh}",
+        "fits": res["memory"]["fits_16GB"],
+        "mem_GB": round(res["memory"]["total_per_dev"] / 1e9, 2),
+        "dominant": r["dominant"],
+        "t_compute_ms": round(r["t_compute_s"] * 1e3, 3),
+        "t_memory_ms": round(r["t_memory_s"] * 1e3, 3),
+        "t_collective_ms": round(r["t_collective_s"] * 1e3, 3),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

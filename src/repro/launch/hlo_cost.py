@@ -1,0 +1,252 @@
+"""HLO cost walker: loop-aware FLOPs / traffic / collective accounting.
+
+XLA's ``cost_analysis()`` counts each while-loop body ONCE (no trip-count
+multiplication), which undercounts scanned-layer models by ~n_layers x.
+This walker parses the post-SPMD HLO text (true dtypes, production GSPMD
+decisions — the CPU backend's f32 normalization has not run yet), builds
+the computation call graph, extracts while trip counts from the loop
+condition, and accumulates per-device costs bottom-up:
+
+  flops      — dot ops: 2 * prod(output shape) * contraction size
+               (contraction read from lhs_contracting_dims + operand shape)
+  coll_bytes — by collective type; result-shape bytes (all-reduce x2)
+  traffic    — HBM proxy: dot operands+outputs, DUS/gather/scatter/reduce
+               in+out, collective results (elementwise ops are assumed fused)
+
+Trip counts: scan lowers to while with a trip counter compared against a
+constant; we find `compare(gte, constant(N)) direction=LT` in the condition
+computation. Unrecognized conditions get multiplier 1 (and are reported).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+               "u16": 2, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+SHAPE_RE = re.compile(r"(" + "|".join(DTYPE_BYTES) + r")\[([\d,]*)\]")
+DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],]+(?:\{[^}]*\})?))\s+([\w\-]+)\(")
+# computation headers sit at column 0: `%name (params...) -> type {`
+COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+CALL_RE = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)="
+                     r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)")
+COMPARE_RE = re.compile(r"compare\(([^)]*)\),?.*direction=(LT|LE|GT|GE|NE)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    # (op, shape_text) -> bytes, loop-multiplied — hillclimb diagnostics
+    detail: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.coll.items():
+            self.coll[k] += v * mult
+        for k, v in other.detail.items():
+            self.detail[k] += v * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.shapes: dict[str, str] = {}      # op name -> shape text
+        cur = None
+        self.entry: str | None = None
+        for line in text.splitlines():
+            m = COMP_RE.match(line) if not line[:1].isspace() else None
+            if m and " = " not in line.split("->")[0]:
+                cur = m.group(1)
+                self.computations[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                self.computations[cur].append(line)
+                d = DEF_RE.match(line)
+                if d:
+                    self.shapes[d.group(1)] = d.group(2)
+
+    # --- trip counts ----------------------------------------------------------
+
+    def trip_count(self, cond_comp: str) -> int | None:
+        lines = self.computations.get(cond_comp, [])
+        consts = {}
+        for ln in lines:
+            c = CONST_RE.search(ln)
+            if c:
+                consts[c.group(1)] = int(c.group(2))
+        for ln in lines:
+            m = COMPARE_RE.search(ln)
+            if m:
+                args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+                for a in args:
+                    if a in consts:
+                        n = consts[a]
+                        return n + 1 if m.group(2) == "LE" else n
+        return None
+
+    # --- per-op costs -----------------------------------------------------------
+
+    def _operand_names(self, line: str) -> list[str]:
+        m = re.search(r"\(([^)]*)\)", line.split("=", 1)[1])
+        if not m:
+            return []
+        return [a.strip().lstrip("%") for a in m.group(1).split(",") if a.strip()]
+
+    def _dot_flops(self, line: str, out_shape: str) -> float:
+        out_elems, _ = _shape_elems_bytes(out_shape)
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        ops = self._operand_names(line)
+        if not mc or not ops:
+            return 0.0
+        lhs_shape = self.shapes.get(ops[0], "")
+        dims_m = SHAPE_RE.search(lhs_shape)
+        if not dims_m:
+            return 0.0
+        dims = [int(x) for x in dims_m.group(2).split(",")] if dims_m.group(2) else []
+        k = 1
+        for ci in (int(x) for x in mc.group(1).split(",") if x):
+            if ci < len(dims):
+                k *= dims[ci]
+        return 2.0 * out_elems * k
+
+    def _line_costs(self, line: str, comp_costs: dict) -> Costs:
+        c = Costs()
+        d = DEF_RE.match(line)
+        if not d:
+            return c
+        shape_txt, op = d.group(2), d.group(3)
+        _, out_bytes = _shape_elems_bytes(shape_txt)
+
+        # recurse into called computations
+        for m in CALL_RE.finditer(line):
+            names = ([n.strip().lstrip("%") for n in m.group(1).split(",")]
+                     if m.group(1) else [m.group(2)])
+            if op == "while":
+                cond, body = None, None
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if cm and bm:
+                    cond, body = cm.group(1), bm.group(1)
+                    trips = self.trip_count(cond) or 1
+                    c.add(comp_costs[body], trips)
+                break
+            for nm in names:
+                if nm in comp_costs and op != "while":
+                    c.add(comp_costs[nm])
+
+        if op == "dot":
+            c.flops += self._dot_flops(line, shape_txt)
+            in_bytes = sum(_shape_elems_bytes(self.shapes.get(o, ""))[1]
+                           for o in self._operand_names(line))
+            c.traffic += out_bytes + in_bytes
+            c.detail[("traffic:dot", shape_txt)] += out_bytes + in_bytes
+        elif op in COLLECTIVES or any(op == f"{k}-start" for k in COLLECTIVES):
+            base = op.removesuffix("-start")
+            bytes_ = out_bytes * (2 if base == "all-reduce" else 1)
+            c.coll[base] += bytes_
+            c.detail[(base, shape_txt)] += bytes_
+            c.traffic += out_bytes
+        elif op in ("dynamic-slice", "gather"):
+            # reads only the sliced region (~= output), not the whole buffer
+            c.traffic += 2 * out_bytes
+        elif op == "dynamic-update-slice":
+            ops_ = self._operand_names(line)
+            upd = _shape_elems_bytes(self.shapes.get(ops_[1], ""))[1] \
+                if len(ops_) > 1 else out_bytes
+            c.traffic += 2 * upd  # in-place: read update + write region
+        elif op == "scatter":
+            ops_ = self._operand_names(line)
+            upd = _shape_elems_bytes(self.shapes.get(ops_[-1], ""))[1] \
+                if ops_ else out_bytes
+            c.traffic += 2 * upd
+        elif op in ("reduce", "reduce-window", "sort", "convolution",
+                    "cholesky", "triangular-solve"):
+            in_bytes = sum(_shape_elems_bytes(self.shapes.get(o, ""))[1]
+                           for o in self._operand_names(line))
+            c.traffic += out_bytes + in_bytes
+            c.detail[(f"traffic:{op}", shape_txt)] += out_bytes + in_bytes
+        return c
+
+    def entry_costs(self, entry: str | None = None) -> Costs:
+        # bottom-up: process computations in dependency order (iteratively)
+        comp_costs: dict[str, Costs] = {}
+        remaining = dict(self.computations)
+        for _ in range(len(remaining) + 2):
+            progressed = False
+            for name, lines in list(remaining.items()):
+                deps = set()
+                for ln in lines:
+                    for m in CALL_RE.finditer(ln):
+                        names = ([n.strip().lstrip("%") for n in m.group(1).split(",")]
+                                 if m.group(1) else [m.group(2)])
+                        deps.update(n for n in names if n in self.computations)
+                if deps - set(comp_costs):
+                    continue
+                total = Costs()
+                for ln in lines:
+                    total.add(self._line_costs(ln, comp_costs))
+                comp_costs[name] = total
+                del remaining[name]
+                progressed = True
+            if not remaining or not progressed:
+                break
+        if entry is None:
+            entry = self.entry
+        if entry is None:
+            # fallback: a computation never referenced by others
+            referenced = set()
+            for lines in self.computations.values():
+                for ln in lines:
+                    for m in CALL_RE.finditer(ln):
+                        names = ([n.strip().lstrip("%") for n in m.group(1).split(",")]
+                                 if m.group(1) else [m.group(2)])
+                        referenced.update(names)
+            entries = [n for n in self.computations if n not in referenced]
+            entry = entries[0] if entries else next(iter(self.computations))
+        if entry not in comp_costs:
+            raise RuntimeError(
+                f"HLO walker failed to resolve entry {entry!r}; "
+                f"unresolved computations: {len(self.computations) - len(comp_costs)}")
+        return comp_costs[entry]
+
+
+def analyze_hlo(text: str, top_k: int = 0) -> dict:
+    mod = HloModule(text)
+    c = mod.entry_costs()
+    coll = dict(c.coll)
+    coll["total"] = sum(coll.values())
+    out = {"flops": c.flops, "traffic": c.traffic, "coll": coll}
+    if top_k:
+        items = sorted(c.detail.items(), key=lambda kv: -kv[1])[:top_k]
+        out["top_collectives"] = [
+            {"op": op, "shape": shp, "gbytes": round(b / 1e9, 3)}
+            for (op, shp), b in items]
+    return out

@@ -1,0 +1,82 @@
+"""Serving driver: batched prefill + decode loop (deliverable (b)).
+
+A minimal continuous-batching server core: requests arrive with prompts,
+are prefillied into a shared KV cache, and decode in lock-step batches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --smoke \
+      --requests 4 --gen-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import steps
+from repro.models import lm
+from repro.models.spec import init_params
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="xlstm-350m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = init_params(lm.model_spec(cfg), jax.random.PRNGKey(args.seed),
+                         jnp.float32 if args.smoke else jnp.bfloat16)
+
+    rng = np.random.default_rng(args.seed)
+    b, s = args.requests, args.prompt_len
+    cache_len = s + args.gen_tokens
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.frontend_dim and not cfg.encoder_layers:
+        batch["vision"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_tokens, cfg.frontend_dim)),
+            jnp.float32)
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_tokens, cfg.frontend_dim)),
+            jnp.float32)
+
+    prefill = jax.jit(functools.partial(steps.prefill_step, cfg=cfg,
+                                        cache_len=cache_len))
+    decode = jax.jit(functools.partial(steps.serve_step, cfg=cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    out_tokens = [tok]
+    t1 = time.time()
+    for i in range(args.gen_tokens - 1):
+        tok, logits, cache = decode(params, cache, tok, jnp.int32(s + i))
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
+
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"prefill {b}x{s} tokens in {t_prefill:.2f}s; "
+          f"decoded {args.gen_tokens - 1} steps in {t_decode:.2f}s "
+          f"({b * (args.gen_tokens - 1) / max(t_decode, 1e-9):.1f} tok/s)")
+    for r in range(min(b, 2)):
+        print(f"request {r}: generated {gen[r].tolist()}")
+    assert gen.shape == (b, args.gen_tokens)
+    assert (gen >= 0).all() and (gen < cfg.vocab).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Jittable step functions: train_step (fwd + bwd + AdamW) and serve steps
+(prefill_step / decode one token). These are what the dry-run lowers and the
+real launcher runs."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def train_step(state: TrainState, batch: dict, *, cfg: ModelConfig,
+               opt_cfg: adamw.OptConfig):
+    """One optimizer step (grad accumulation handled by the caller looping
+    micro-batches; accum_steps=1 here keeps the dry-run graph canonical)."""
+
+    def loss_fn(params):
+        loss, metrics = lm.train_loss(params, cfg, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+    new_params, new_opt, opt_metrics = adamw.apply_updates(
+        opt_cfg, state.params, grads, state.opt)
+    metrics = dict(metrics, **opt_metrics, total_loss=loss)
+    return TrainState(new_params, new_opt), metrics
+
+
+def train_step_accum(state: TrainState, batches: dict, *, cfg: ModelConfig,
+                     opt_cfg: adamw.OptConfig, param_shardings=None):
+    """Gradient accumulation over a leading micro-batch axis in ``batches``.
+
+    ``param_shardings`` pins the f32 accumulator tree to the parameter
+    layout — without it GSPMD can replicate the accumulator (a full f32
+    param copy per device)."""
+
+    def loss_fn(params, batch):
+        loss, _ = lm.train_loss(params, cfg, batch)
+        return loss
+
+    def constrain(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_shardings)
+
+    def micro(carry, batch):
+        gsum, lsum = carry
+        loss, g = jax.value_and_grad(loss_fn)(state.params, batch)
+        gsum = constrain(jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                      gsum, g))
+        return (gsum, lsum + loss), None
+
+    from repro.models import runtime_flags as rf
+    gdt = jnp.bfloat16 if opt_cfg.grad_dtype == "bfloat16" else jnp.float32
+    zeros = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, gdt),
+                                   state.params))
+    (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)), batches,
+                                   unroll=rf.scan_unroll(opt_cfg.accum_steps))
+    n = opt_cfg.accum_steps
+    grads = jax.tree.map(lambda g: (g / n).astype(jnp.float32), gsum)
+    new_params, new_opt, om = adamw.apply_updates(opt_cfg, state.params, grads, state.opt)
+    return TrainState(new_params, new_opt), dict(om, total_loss=lsum / n)
+
+
+def prefill_step(params, batch: dict, *, cfg: ModelConfig, cache_len: int):
+    logits, cache = lm.prefill(params, cfg, batch, cache_len=cache_len)
+    return logits, cache
+
+
+def serve_step(params, cache, token: jax.Array, cache_pos: jax.Array, *,
+               cfg: ModelConfig):
+    """One new token against an existing KV cache / recurrent state."""
+    logits, new_cache = lm.decode_step(params, cfg, token, cache, cache_pos)
+    next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    return next_token, logits, new_cache

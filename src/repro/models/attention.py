@@ -1,0 +1,242 @@
+"""GQA/MQA/MHA attention with RoPE, sliding windows, softcapping, QK-norm,
+cross-attention, and KV caches for prefill/decode.
+
+KV cache contract (decode): cache holds ``S`` past tokens; the new token is
+written at ``pos % S`` and attends to every cached position ``<= pos`` (ring
+semantics; for the assigned decode shapes pos == S so the full cache is
+live). The cache layout (B, S, n_kv, hd) is sharded batch-over-data and
+seq-over-model (SP-decode, DESIGN.md §6) — head counts (8, 10, 1, ...) are
+rarely divisible by the model axis, sequence always is.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.spec import TensorSpec
+
+NEG_INF = -2.0 ** 30  # large-but-finite; keeps softmax NaN-free on full masks
+
+# Long sequences use blockwise (flash-style) attention: (S, S) scores never
+# materialize; tiles are (Q_CHUNK, KV_CHUNK) with online-softmax carry.
+CHUNKED_THRESHOLD = 8192
+Q_CHUNK = 1024
+KV_CHUNK = 4096
+
+
+class KvCache(NamedTuple):
+    k: jax.Array  # (B, S, n_kv, hd)
+    v: jax.Array  # (B, S, n_kv, hd)
+
+
+def attn_spec(cfg: ModelConfig, cross: bool = False) -> dict:
+    """Cross-attention K/V consume the memory stream, which is always
+    pre-projected to d_model (frontend_proj / encoder output)."""
+    del cross
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    spec = {
+        "wq": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "wk": TensorSpec((d, kv, hd), ("embed", "kv", "qkv")),
+        "wv": TensorSpec((d, kv, hd), ("embed", "kv", "qkv")),
+        "wo": TensorSpec((h, hd, d), ("heads", "qkv", "embed")),
+    }
+    if cfg.attn_bias:
+        spec["bq"] = TensorSpec((h, hd), ("heads", "qkv"), init="zeros")
+        spec["bk"] = TensorSpec((kv, hd), ("kv", "qkv"), init="zeros")
+        spec["bv"] = TensorSpec((kv, hd), ("kv", "qkv"), init="zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = L.rmsnorm_spec(hd)
+        spec["k_norm"] = L.rmsnorm_spec(hd)
+    return spec
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, kv_input: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_input, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_input, p["wv"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: jax.Array | None) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd); mask: (B|1, S, T) bool or None.
+
+    GQA k/v are broadcast to full query heads BEFORE the score einsum: the
+    (kv, rep) grouped layout makes the (S, S) score tensor unshardable when
+    kv < mesh model-axis (it replicates and blows HBM). Full-head scores
+    shard over heads or query-seq — `constrain_scores` picks per mesh."""
+    from repro.parallel.sharding import constrain_scores
+    b, s, h, hd = q.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    rep = h // n_kv
+    if rep > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, n_kv, rep, hd)).reshape(b, t, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (b, t, n_kv, rep, hd)).reshape(b, t, h, hd)
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = L.softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    scores = constrain_scores(scores, decode=s == 1)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return out
+
+
+def _sdpa_chunked(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, window: int | None, causal: bool) -> jax.Array:
+    """Blockwise attention with online softmax (XLA-level flash attention).
+
+    Outer scan over query chunks; inner scan over a bounded span of KV
+    chunks (the full prefix for global causal — masked tiles included, a
+    documented ~2x attention-FLOP overcount for causal prefill — or
+    window//KV_CHUNK + 2 chunks for sliding-window layers)."""
+    from repro.parallel.sharding import constrain_scores
+    b, s, h, hd = q.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    rep = h // n_kv
+    if rep > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, n_kv, rep, hd)).reshape(b, t, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (b, t, n_kv, rep, hd)).reshape(b, t, h, hd)
+    qc = min(Q_CHUNK, s)
+    kc = min(KV_CHUNK, t)
+    n_q = s // qc
+    n_k = t // kc
+    assert s % qc == 0 and t % kc == 0, (s, t)
+    span = n_k if (window is None or not causal) \
+        else min(n_k, window // kc + 2)
+    scale = hd ** -0.5
+
+    q_ = q.reshape(b, n_q, qc, h, hd).swapaxes(0, 1)       # (n_q, B, qc, H, hd)
+
+    def q_step(_, xs):
+        qi, q_chunk = xs                                    # q_chunk (B,qc,H,hd)
+        q_lo = qi * qc
+
+        def kv_step(carry, jj):
+            m_run, l_run, acc = carry
+            # chunk index: the trailing `span` chunks ending at the diagonal;
+            # out-of-range chunks are fully masked (clipped slice, dead tile).
+            kj_raw = (qi - span + 1 + jj) if causal else jj
+            kj = jnp.clip(kj_raw, 0, n_k - 1)
+            valid = (kj_raw >= 0) & (kj_raw <= (qi if causal else n_k - 1))
+            k_lo = kj * kc
+            k_chunk = jax.lax.dynamic_slice(
+                k, (0, k_lo, 0, 0), (b, kc, h, hd))
+            v_chunk = jax.lax.dynamic_slice(
+                v, (0, k_lo, 0, 0), (b, kc, h, hd))
+            scores = jnp.einsum("bshk,bthk->bhst", q_chunk, k_chunk)
+            scores = scores.astype(jnp.float32) * scale
+            scores = L.softcap(scores, cfg.attn_softcap)
+            qpos = q_lo + jnp.arange(qc)[:, None]
+            kpos = k_lo + jnp.arange(kc)[None, :]
+            live = jnp.broadcast_to(valid, (qc, kc))
+            if causal:
+                live &= kpos <= qpos
+            if window is not None:
+                live &= kpos > qpos - window
+            scores = jnp.where(live[None, None], scores, -jnp.inf)
+            scores = constrain_scores(scores)
+            m_new = jnp.maximum(m_run, scores.max(-1))
+            # -inf guards: rows with no live key yet must contribute 0.
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(scores - safe_m[..., None])          # exp(-inf) = 0
+            corr = jnp.where(jnp.isfinite(m_run),
+                             jnp.exp(m_run - safe_m), 0.0)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhst,bthk->bhsk", p.astype(q.dtype), v_chunk).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(span))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out.swapaxes(1, 2)                     # (B, qc, H, hd)
+
+    q_step = jax.checkpoint(q_step)
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(n_q), q_))
+    return outs.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def _causal_mask(s: int, window: int | None, q_offset: int = 0) -> jax.Array:
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(s + q_offset)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None]  # (1, S, S+off)
+
+
+def self_attention(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                   positions: jax.Array, window: int | None,
+                   cache: KvCache | None = None,
+                   cache_pos: jax.Array | None = None,
+                   causal: bool = True):
+    """Returns (out, new_cache). Modes:
+      train/prefill: full sequence, causal (or bidirectional for encoders);
+                     returns the (B, S, kv, hd) cache when cache is None.
+      decode:        x is (B, 1, D); cache holds S past tokens.
+    """
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k_new = L.rope(k_new, positions, cfg.rope_theta)
+
+    if cache is None:  # train / prefill
+        s = x.shape[1]
+        if s >= CHUNKED_THRESHOLD:
+            out = _sdpa_chunked(cfg, q, k_new, v_new, window=window,
+                                causal=causal)
+        else:
+            mask = _causal_mask(s, window) if causal else None
+            out = _sdpa(cfg, q, k_new, v_new, mask)
+        new_cache = KvCache(k=k_new, v=v_new)
+    else:  # decode: single new token at absolute position cache_pos
+        s_cache = cache.k.shape[1]
+        slot = (cache_pos % s_cache).astype(jnp.int32)
+        k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+        kpos = jnp.arange(s_cache)[None, :]
+        live = kpos <= cache_pos
+        if window is not None:
+            live &= kpos > cache_pos - window
+        out = _sdpa(cfg, q, k, v, live[:, None, :])
+        new_cache = KvCache(k=k, v=v)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                    memory_kv: KvCache) -> jax.Array:
+    """Cross-attention to precomputed encoder/frontend K,V (no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    out = _sdpa(cfg, q, memory_kv.k, memory_kv.v, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def encode_memory(p: dict, cfg: ModelConfig, memory: jax.Array) -> KvCache:
+    """Project encoder output / modality-frontend embeddings to cross K,V."""
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"].astype(memory.dtype))
+    if cfg.attn_bias:
+        k = k + p["bk"].astype(memory.dtype)
+        v = v + p["bv"].astype(memory.dtype)
+    if cfg.qk_norm:
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return KvCache(k=k, v=v)

@@ -1,0 +1,201 @@
+"""Sublayer/group assembly: every architecture is n_groups repeats of a
+block_pattern of sublayers, scanned with remat (MaxText-style stacked
+layers). Heterogeneous patterns (gemma2 local/global, jamba attn:mamba 1:7,
+vision cross-attn every 5th) live entirely in the pattern."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mlp as M
+from repro.models import ssm as S
+from repro.models.spec import TensorSpec
+
+Cache = Any  # pytree per sublayer; {} when stateless in decode
+
+
+def _ffn_part_spec(cfg: ModelConfig, kind: str, layer_in_group: int) -> dict:
+    """FFN spec attached to a sublayer: dense, MoE, or none (d_ff == 0)."""
+    if kind.endswith("_moe"):
+        return {"moe": M.moe_spec(cfg)}
+    if cfg.d_ff > 0:
+        return {"ffn": M.ffn_spec(cfg)}
+    return {}
+
+
+def sublayer_spec(cfg: ModelConfig, kind: str, layer_in_group: int = 0) -> dict:
+    d = cfg.d_model
+    spec: dict = {"norm1": L.rmsnorm_spec(d)}
+    base = kind.removesuffix("_moe")
+    if base in ("attn", "attn_local"):
+        spec["attn"] = A.attn_spec(cfg)
+    elif base == "cross":
+        spec["attn"] = A.attn_spec(cfg, cross=True)
+    elif base == "mamba":
+        spec["mamba"] = S.mamba_spec(cfg)
+    elif base == "mlstm":
+        spec["mlstm"] = S.mlstm_spec(cfg)
+    elif base == "slstm":
+        spec["slstm"] = S.slstm_spec(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.sandwich_norm:
+        spec["norm1_post"] = L.rmsnorm_spec(d)
+
+    ffn_spec = _ffn_part_spec(cfg, kind, layer_in_group)
+    if ffn_spec:
+        spec["norm2"] = L.rmsnorm_spec(d)
+        spec.update(ffn_spec)
+        if cfg.sandwich_norm:
+            spec["norm2_post"] = L.rmsnorm_spec(d)
+    return spec
+
+
+def sublayer_cache_shape(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    """Zero-initialized decode cache for one sublayer (shapes only matter)."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    h = cfg.n_heads
+    di = cfg.ssm_expand * cfg.d_model
+    base = kind.removesuffix("_moe")
+    f32 = jnp.float32
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else f32
+    if base in ("attn", "attn_local"):
+        return {"k": ((batch, cache_len, kv, hd), act),
+                "v": ((batch, cache_len, kv, hd), act)}
+    if base == "cross":
+        t = max(cfg.frontend_tokens, 1)
+        return {"mk": ((batch, t, kv, hd), act),
+                "mv": ((batch, t, kv, hd), act)}
+    if base == "mamba":
+        return {"state": ((batch, di, cfg.ssm_state), f32),
+                "conv": ((batch, cfg.ssm_conv - 1, di), act)}
+    if base == "mlstm":
+        return {"C": ((batch, h, hd, hd), f32), "n": ((batch, h, hd), f32)}
+    if base == "slstm":
+        return {"h": ((batch, h, hd), f32), "c": ((batch, h, hd), f32),
+                "n": ((batch, h, hd), f32)}
+    raise ValueError(kind)
+
+
+def sublayer_apply(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                   ctx: dict, cache: dict | None):
+    """Returns (x, new_cache, aux_loss). ctx keys: positions (B,S) or (B,1)
+    absolute positions; mode; memory (B,T,D) for cross; cache_pos scalar."""
+    base = kind.removesuffix("_moe")
+    mode = ctx["mode"]
+    aux = jnp.float32(0.0)
+    new_cache: dict = {}
+
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mode != "decode" and x.shape[1] > 1:
+        from repro.parallel.sharding import (constrain_attn_input,
+                                             constrain_block_input)
+        h = constrain_block_input(h)
+        if base in ("attn", "attn_local", "cross"):
+            h = constrain_attn_input(h)
+    if base in ("attn", "attn_local"):
+        window = cfg.sliding_window if base == "attn_local" else None
+        if mode == "decode":
+            kvc = A.KvCache(cache["k"], cache["v"])
+            out, kvc2 = A.self_attention(
+                p["attn"], cfg, h, positions=ctx["positions"], window=window,
+                cache=kvc, cache_pos=ctx["cache_pos"])
+            new_cache = {"k": kvc2.k, "v": kvc2.v}
+        else:
+            out, kvc2 = A.self_attention(
+                p["attn"], cfg, h, positions=ctx["positions"], window=window,
+                causal=ctx.get("causal", True))
+            if mode == "prefill":  # write prompt K/V into the allocated cache
+                z = (0, 0, 0, 0)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], kvc2.k.astype(cache["k"].dtype), z),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], kvc2.v.astype(cache["v"].dtype), z),
+                }
+    elif base == "cross":
+        if mode == "decode":
+            mem_kv = A.KvCache(cache["mk"], cache["mv"])
+            new_cache = dict(cache)
+        else:
+            mem_kv = A.encode_memory(p["attn"], cfg, ctx["memory"])
+            if mode == "prefill":
+                new_cache = {"mk": mem_kv.k, "mv": mem_kv.v}
+        out = A.cross_attention(p["attn"], cfg, h, mem_kv)
+    elif base == "mamba":
+        if mode == "decode":
+            out, (st, cv) = S.mamba(p["mamba"], cfg, h, state=cache["state"],
+                                    conv_state=cache["conv"])
+            new_cache = {"state": st, "conv": cv}
+        else:
+            out, (st, cv) = S.mamba(p["mamba"], cfg, h)
+            if mode == "prefill":
+                new_cache = {"state": st, "conv": cv}
+    elif base == "mlstm":
+        if mode == "decode":
+            out, (C, n) = S.mlstm(p["mlstm"], cfg, h, state=(cache["C"], cache["n"]))
+            new_cache = {"C": C, "n": n}
+        else:
+            out, (C, n) = S.mlstm(p["mlstm"], cfg, h)
+            if mode == "prefill":
+                new_cache = {"C": C, "n": n}
+    elif base == "slstm":
+        if mode == "decode":
+            out, (hs, cs, ns) = S.slstm(p["slstm"], cfg, h,
+                                        state=(cache["h"], cache["c"], cache["n"]))
+            new_cache = {"h": hs, "c": cs, "n": ns}
+        else:
+            out, (hs, cs, ns) = S.slstm(p["slstm"], cfg, h)
+            if mode == "prefill":
+                new_cache = {"h": hs, "c": cs, "n": ns}
+    else:
+        raise ValueError(kind)
+
+    if cfg.sandwich_norm:
+        out = L.rmsnorm(p["norm1_post"], out, cfg.norm_eps)
+    x = x + out
+
+    if kind.endswith("_moe") or "ffn" in p:
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind.endswith("_moe"):
+            y, aux = M.moe_ffn(p["moe"], cfg, h2)
+        else:
+            y = M.ffn(p["ffn"], cfg, h2)
+        if cfg.sandwich_norm:
+            y = L.rmsnorm(p["norm2_post"], y, cfg.norm_eps)
+        x = x + y
+    return x, new_cache, aux
+
+
+def group_spec(cfg: ModelConfig) -> dict:
+    return {f"sub{i}_{kind}": sublayer_spec(cfg, kind, i)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def group_apply(cfg: ModelConfig, params: dict, x: jax.Array, ctx: dict,
+                cache: dict | None):
+    """Apply one pattern group. cache: {subkey: subcache} or None."""
+    new_cache: dict = {}
+    aux_total = jnp.float32(0.0)
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"sub{i}_{kind}"
+        sub_cache = cache.get(key) if cache is not None else None
+        x, nc, aux = sublayer_apply(cfg, kind, params[key], x, ctx, sub_cache)
+        if nc:
+            new_cache[key] = nc
+        aux_total = aux_total + aux
+    return x, new_cache, aux_total
+
+
+def group_cache_shapes(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    shapes = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        base = kind.removesuffix("_moe")
+        if base in ("attn", "attn_local", "cross", "mamba", "mlstm", "slstm"):
+            shapes[f"sub{i}_{kind}"] = sublayer_cache_shape(cfg, kind, batch, cache_len)
+    return shapes

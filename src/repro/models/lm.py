@@ -1,0 +1,271 @@
+"""Full models: decoder LM (all 10 archs), optional encoder (enc-dec), and
+the train / prefill / decode entry points.
+
+Layer stacking: parameters for the repeated block group are stacked on a
+leading "layers" axis and consumed by ``lax.scan`` with full remat
+(MaxText-style) — compile time is O(1) in depth and activation memory is
+one group plus the per-group carry.
+
+Loss is chunked over the sequence so (B, S, vocab) logits never materialize
+(256k vocabularies at 4k tokens would be tens of GB otherwise).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.spec import TensorSpec, stack_specs
+from repro.parallel.sharding import constrain_activation
+from repro.models import runtime_flags as rf
+
+LOSS_CHUNK = 512
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+def model_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    spec: dict = {
+        # std 1/sqrt(d): tied logits land at O(1); gemma-style scale_embed
+        # multiplies activations back up by sqrt(d).
+        "embed": TensorSpec((cfg.padded_vocab, d), ("vocab", "embed"),
+                            init="embed", scale=d ** -0.5),
+        "layers": stack_specs(B.group_spec(cfg), cfg.n_groups),
+        "final_norm": L.rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = TensorSpec((d, cfg.padded_vocab), ("embed", "vocab"))
+    if cfg.first_layer_dense_ff:  # deepseek: dense layer 0
+        dense_cfg = cfg.scaled(block_pattern=("attn",), d_ff=cfg.first_layer_dense_ff,
+                               n_experts=0)
+        spec["layer0"] = B.group_spec(dense_cfg)
+    if cfg.frontend_dim:
+        spec["frontend_proj"] = TensorSpec((cfg.frontend_dim, d), (None, "embed"))
+    if cfg.encoder_layers:
+        enc_cfg = cfg.scaled(block_pattern=("attn",), n_experts=0)
+        spec["encoder"] = {
+            "layers": stack_specs(B.group_spec(enc_cfg), cfg.encoder_layers),
+            "final_norm": L.rmsnorm_spec(d),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Shared stack runner
+# ---------------------------------------------------------------------------
+
+def _scan_groups(cfg: ModelConfig, stacked_params, x, ctx, cache_stacked):
+    """Scan the group stack. cache_stacked: pytree with leading n_groups axis
+    (or None in train mode). Returns (x, new_cache_stacked, aux_sum)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        p_g, c_g = xs
+        h, new_c, aux_g = B.group_apply(cfg, p_g, h, ctx, c_g)
+        return (constrain_activation(h), aux + aux_g), new_c
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stacked_params, cache_stacked),
+        unroll=rf.scan_unroll(cfg.n_groups))
+    return x, new_cache, aux
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    h = params["embed"][tokens].astype(_dtype(cfg))
+    if cfg.scale_embed:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def _mask_padded_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    live = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(live, logits, A.NEG_INF)
+
+
+def _logits(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype)).astype(jnp.float32)
+    return _mask_padded_vocab(cfg, L.softcap(logits, cfg.final_softcap))
+
+
+def _run_encoder(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Bidirectional encoder over frontend embeddings (B, T, frontend_dim)."""
+    enc_cfg = cfg.scaled(block_pattern=("attn",), n_experts=0)
+    h = jnp.einsum("btf,fd->btd", frames.astype(_dtype(cfg)),
+                   params["frontend_proj"].astype(_dtype(cfg)))
+    t = h.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(t)[None], h.shape[:2])
+    ctx = {"mode": "train", "positions": pos, "causal": False}
+
+    def body(carry, p_g):
+        hh, _ = carry
+        hh, _, _ = B.group_apply(enc_cfg, p_g, hh, ctx, None)
+        return (hh, jnp.float32(0.0)), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, _), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), params["encoder"]["layers"],
+                             unroll=rf.scan_unroll(cfg.encoder_layers))
+    return L.rmsnorm(params["encoder"]["final_norm"], h, cfg.norm_eps)
+
+
+def _memory(params, cfg: ModelConfig, batch: dict) -> jax.Array | None:
+    """Cross-attention memory: encoder output (audio) or projected patch
+    embeddings (vlm). The modality frontend itself is a stub per assignment."""
+    if cfg.encoder_layers:
+        return _run_encoder(params, cfg, batch["frames"])
+    if cfg.frontend_dim:
+        v = batch["vision"].astype(_dtype(cfg))
+        return jnp.einsum("btf,fd->btd", v, params["frontend_proj"].astype(_dtype(cfg)))
+    return None
+
+
+def _run_stack(params, cfg: ModelConfig, h: jax.Array, ctx: dict, cache=None):
+    aux0 = jnp.float32(0.0)
+    if "layer0" in params:  # deepseek dense first layer (not scanned)
+        dense_cfg = cfg.scaled(block_pattern=("attn",), d_ff=cfg.first_layer_dense_ff,
+                               n_experts=0)
+        c0 = cache["layer0"] if cache is not None else None
+        h, c0_new, _ = B.group_apply(dense_cfg, params["layer0"], h, ctx, c0)
+    else:
+        c0_new = None
+    stacked_cache = cache["layers"] if cache is not None else None
+    if stacked_cache is None:
+        # Train mode: scan without cache xs -> feed per-group empty pytrees.
+        def body(carry, p_g):
+            hh, aux = carry
+            hh, _, aux_g = B.group_apply(cfg, p_g, hh, ctx, None)
+            return (constrain_activation(hh), aux + aux_g), None
+
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        (h, aux), _ = jax.lax.scan(body, (h, aux0), params["layers"],
+                                   unroll=rf.scan_unroll(cfg.n_groups))
+        new_cache = None
+    else:
+        h, new_stacked, aux = _scan_groups(cfg, params["layers"], h, ctx, stacked_cache)
+        new_cache = {"layers": new_stacked}
+        if c0_new is not None:
+            new_cache["layer0"] = c0_new
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def _chunked_xent(params, cfg: ModelConfig, h: jax.Array, labels: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """Mean token cross-entropy without materializing full logits."""
+    b, s, d = h.shape
+    c = min(LOSS_CHUNK, s)
+    n_chunks = s // c
+    assert s % c == 0
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def chunk(carry, xs):
+        hx, lx, mx = xs                                        # (B,c,*)
+        logits = jnp.einsum("bsd,dv->bsv", hx, w.astype(hx.dtype)).astype(jnp.float32)
+        logits = _mask_padded_vocab(cfg, L.softcap(logits, cfg.final_softcap))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - gold) * mx)
+        return carry + loss, None
+
+    chunk = jax.checkpoint(chunk)
+    hs = h.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, c).swapaxes(0, 1)
+    ms = mask.reshape(b, n_chunks, c).swapaxes(0, 1).astype(jnp.float32)
+    total, _ = jax.lax.scan(chunk, jnp.float32(0.0), (hs, ls, ms),
+                            unroll=rf.scan_unroll(n_chunks))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """batch: tokens (B,S) int32, labels (B,S) int32, loss_mask (B,S) bool,
+    plus frames/vision for audio/vlm archs."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed(params, cfg, tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ctx = {"mode": "train", "positions": pos}
+    mem = _memory(params, cfg, batch)
+    if mem is not None:
+        ctx["memory"] = mem
+    h, _, aux = _run_stack(params, cfg, h, ctx)
+    loss = _chunked_xent(params, cfg, h, batch["labels"], batch["loss_mask"])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": batch["loss_mask"].sum()}
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Zeroed decode cache (group-stacked)."""
+    shapes = B.group_cache_shapes(cfg, batch, cache_len)
+
+    def mk(leaf):
+        shape, dtype = leaf
+        return jnp.zeros((cfg.n_groups,) + shape, dtype)
+
+    def is_shape_leaf(x):
+        return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+    cache: dict = {"layers": jax.tree.map(mk, shapes, is_leaf=is_shape_leaf)}
+    if cfg.first_layer_dense_ff:
+        dense_cfg = cfg.scaled(block_pattern=("attn",), d_ff=cfg.first_layer_dense_ff,
+                               n_experts=0)
+        cache["layer0"] = jax.tree.map(  # not scanned: no leading groups axis
+            lambda leaf: jnp.zeros(*leaf),
+            B.group_cache_shapes(dense_cfg, batch, cache_len),
+            is_leaf=is_shape_leaf)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache_len: int | None = None):
+    """Run the full prompt; returns (last-position logits, cache). The cache
+    is allocated at ``cache_len`` (>= prompt length) so decode can append."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed(params, cfg, tokens)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ctx = {"mode": "prefill", "positions": pos}
+    mem = _memory(params, cfg, batch)
+    if mem is not None:
+        ctx["memory"] = mem
+    # Prefill writes caches: run with a zeroed cache pytree; each sublayer
+    # emits its cache (prompt K/V written at slots [0, s), recurrent final
+    # states, or cross-attention memory K/V).
+    cache0 = init_cache(cfg, b, cache_len or s)
+    h, new_cache, _ = _run_stack(params, cfg, h, ctx, cache0)
+    logits = _logits(params, cfg, h[:, -1:, :])
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache,
+                cache_pos: jax.Array):
+    """One decode step. token (B, 1) int32; cache from init_cache/prefill;
+    cache_pos: scalar absolute position. Returns (logits, new_cache)."""
+    b = token.shape[0]
+    h = _embed(params, cfg, token)
+    pos = jnp.broadcast_to(cache_pos[None, None], (b, 1)).astype(jnp.int32)
+    ctx = {"mode": "decode", "positions": pos, "cache_pos": cache_pos}
+    h, new_cache, _ = _run_stack(params, cfg, h, ctx, cache)
+    return _logits(params, cfg, h), new_cache

@@ -1,0 +1,102 @@
+"""Dense FFN (SwiGLU / GELU) and the MoE FFN with capacity-based dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.spec import TensorSpec
+
+
+# --- dense FFN --------------------------------------------------------------
+
+def ffn_spec(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    spec = {
+        "wi": TensorSpec((d, f), ("embed", "mlp")),
+        "wo": TensorSpec((f, d), ("mlp", "embed")),
+    }
+    if cfg.activation in ("silu", "geglu"):  # gated (SwiGLU / GeGLU)
+        spec["wg"] = TensorSpec((d, f), ("embed", "mlp"))
+    return spec
+
+
+def ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if cfg.activation in ("silu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = L.activate(g, "gelu" if cfg.activation == "geglu" else "silu") * h
+    else:
+        h = L.activate(h, "gelu")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+# --- MoE FFN ----------------------------------------------------------------
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    spec = {
+        "router": TensorSpec((d, e), ("embed", None), scale=d ** -0.5),
+        "wi": TensorSpec((e, d, f), ("experts", "embed", "mlp"), scale=d ** -0.5),
+        "wg": TensorSpec((e, d, f), ("experts", "embed", "mlp"), scale=d ** -0.5),
+        "wo": TensorSpec((e, f, d), ("experts", "mlp", "embed"), scale=f ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        spec["shared"] = ffn_spec(cfg, d_ff=fs)
+    return spec
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """GShard-style grouped capacity dispatch. Tokens are split into groups
+    of ``moe_group_size``; capacity is per (group, expert), so the dispatch
+    one-hot is (G, Tg, E, C) — the largest MoE activation is the inherent
+    k·cf·T·D expert input, never a T×E table. The group dim shards over the
+    data axes and the expert dim over the EP ("model") axis; GSPMD inserts
+    the dispatch all-to-alls. Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_tok = b * s
+    tg = min(cfg.moe_group_size, n_tok)
+    assert n_tok % tg == 0, (n_tok, tg)
+    g = n_tok // tg
+    capacity = max(1, min(int(cfg.capacity_factor * tg * k / e), tg))
+    tokens = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", tokens.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Buffer slot of each (token, choice) within its (group, expert).
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # (G, Tg, k, E)
+    flat = onehot.reshape(g, tg * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, tg, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (G, Tg, k)
+    keep = pos < capacity
+
+    # dispatch one-hot (G, Tg, k, E, C) -> summed over k to (G, Tg, E, C)
+    disp = onehot.astype(x.dtype) * keep[..., None].astype(x.dtype)
+    disp = disp[..., None] * jax.nn.one_hot(pos, capacity, dtype=x.dtype)[..., None, :]
+    disp_te = disp.sum(2)                                      # (G, Tg, E, C)
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp_te, tokens)  # (G, E, C, D)
+
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(x.dtype))
+    gt = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(x.dtype))
+    h = L.activate(gt, "silu") * h
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+
+    combine = disp * gate_vals[..., None, None].astype(x.dtype)  # (G,Tg,k,E,C)
+    out = jnp.einsum("gtkec,gecd->gtd", combine, expert_out)
+
+    if cfg.n_shared_experts:
+        out = out + ffn(p["shared"], cfg, tokens)
+
+    # Load-balancing aux loss (Switch-style), averaged over groups.
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = onehot.astype(jnp.float32).sum(2).mean(axis=(0, 1))   # routed fraction
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,16 @@
+"""Process-wide lowering flags.
+
+UNROLL_SCANS: XLA's cost_analysis does not multiply while-loop bodies by
+their trip counts, so rolled scans undercount FLOPs/bytes/collectives. The
+dry-run calibration pass sets this flag to lower with fully-unrolled scans
+(at reduced layer counts) and extrapolates per-layer costs; production
+lowering keeps scans rolled (compile time, HLO size).
+
+The sequential sLSTM time scan is NEVER unrolled (4096-step bodies); its
+FLOPs are corrected analytically in the dry-run (see dryrun.slstm_flops).
+"""
+UNROLL_SCANS = False
+
+
+def scan_unroll(length: int) -> int | bool:
+    return length if UNROLL_SCANS else 1

@@ -1,0 +1,91 @@
+"""Parameter-spec machinery: one source of truth for shapes, logical axes,
+and initializers.
+
+Every model module builds a pytree of ``TensorSpec`` leaves. From that one
+tree we derive:
+
+* ``init_params``    — materialized parameters (real training / smoke tests)
+* ``abstract_params``— ``jax.ShapeDtypeStruct`` stand-ins (dry-run: no
+                       allocation at any size, the shannon/kernels pattern)
+* ``param_pspecs``   — ``PartitionSpec`` per leaf via the sharding rules
+                       (repro.parallel.sharding)
+
+Logical axis names (mapped to mesh axes by ``repro/parallel/sharding.py``):
+  "embed"   — d_model rows (FSDP-sharded)
+  "mlp"     — ffn hidden (TP)
+  "heads"   — attention query heads (TP)
+  "kv"      — kv heads (TP when divisible)
+  "qkv"     — fused per-head feature dim (never sharded)
+  "vocab"   — vocabulary (TP)
+  "experts" — MoE expert dim (EP)
+  "layers"  — scan-stacked layer dim (never sharded; pipeline later)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TensorSpec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"      # normal | zeros | ones | embed
+    scale: float | None = None  # stddev override; default fan-in
+
+    def with_leading(self, n: int, axis_name: str | None = "layers") -> "TensorSpec":
+        return TensorSpec((n,) + self.shape, (axis_name,) + self.axes, self.init, self.scale)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def _leaf_key(key: jax.Array, path) -> jax.Array:
+    h = int.from_bytes(hashlib.md5(jax.tree_util.keystr(path).encode()).digest()[:4], "big")
+    return jax.random.fold_in(key, h)
+
+
+def _init_leaf(spec: TensorSpec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    # fan-in normal: last axis is the output dim by our convention (in, out)
+    fan_in = int(np.prod(spec.shape[:-1])) if len(spec.shape) > 1 else spec.shape[0]
+    std = spec.scale if spec.scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(spec_tree, key: jax.Array, dtype=jnp.float32):
+    """Materialize parameters. Deterministic per-leaf keys from tree paths."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s: _init_leaf(s, _leaf_key(key, path), dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — dry-run stand-ins, no memory allocated."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree, is_leaf=is_spec)
+
+
+def param_axes(spec_tree):
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_specs(spec_tree, n: int):
+    """Add a leading scan-layer axis of size n to every leaf."""
+    return jax.tree_util.tree_map(lambda s: s.with_leading(n), spec_tree, is_leaf=is_spec)

@@ -1,0 +1,404 @@
+"""State-space and recurrent blocks: Mamba (selective SSM), and the xLSTM
+pair (mLSTM matrix memory, sLSTM scalar memory).
+
+TPU notes (DESIGN.md hardware adaptation):
+* Mamba training uses the chunkwise-parallel form — within a chunk the
+  recurrence h_t = a_t ⊙ h_{t-1} + b_t is an associative scan (log-depth,
+  no while-loop), chunks are carried by a short lax.scan. Chunk size bounds
+  the (B, chunk, d_inner, d_state) working set; d_inner is TP-sharded.
+* mLSTM uses the chunkwise linear-attention form: intra-chunk quadratic
+  scores (MXU matmuls) + inter-chunk carried (hd × hd) matrix state.
+* sLSTM is a true nonlinear recurrence (h_{t-1} feeds the gates); it cannot
+  be parallelized over time and lowers to a sequential lax.scan — this is
+  inherent to the architecture, not a port artifact.
+
+Decode paths carry O(1)-per-token state, which is why the ssm/hybrid archs
+are the ones assigned the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime_flags as rf
+from repro.models.spec import TensorSpec
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def _chunk_len(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (shapes are static)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def mamba_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    dtr = _dt_rank(cfg)
+    return {
+        "in_proj": TensorSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": TensorSpec((cfg.ssm_conv, di), (None, "mlp"), scale=cfg.ssm_conv ** -0.5),
+        "conv_b": TensorSpec((di,), ("mlp",), init="zeros"),
+        "x_proj": TensorSpec((di, dtr + 2 * ds), ("mlp", None)),
+        "dt_proj": TensorSpec((dtr, di), (None, "mlp"), scale=dtr ** -0.5),
+        "dt_bias": TensorSpec((di,), ("mlp",), init="zeros"),
+        "a_log": TensorSpec((di, ds), ("mlp", None), init="ones"),
+        "d_skip": TensorSpec((di,), ("mlp",), init="ones"),
+        "out_proj": TensorSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _mamba_gates(p: dict, cfg: ModelConfig, xz: jax.Array, conv_state=None):
+    """Shared front half: split, causal depthwise conv, selective params.
+    xz: (B, S, 2*di). Returns (x, z, dt, bsel, csel, new_conv_state)."""
+    di = cfg.ssm_expand * cfg.d_model
+    ds = cfg.ssm_state
+    dtr = _dt_rank(cfg)
+    x, z = xz[..., :di], xz[..., di:]
+
+    k = cfg.ssm_conv
+    if conv_state is None:  # full-sequence causal depthwise conv
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_conv_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+        x = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+                for i in range(k))
+    else:  # single step: conv_state (B, k-1, di)
+        window = jnp.concatenate([conv_state, x], axis=1)  # (B, k, di)
+        new_conv_state = window[:, 1:, :]
+        x = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))[:, None, :]
+    x = jax.nn.silu(x + p["conv_b"].astype(x.dtype))
+
+    sel = jnp.einsum("bsd,dr->bsr", x, p["x_proj"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", sel[..., :dtr], p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype))                       # (B,S,di)
+    bsel = sel[..., dtr:dtr + ds]                              # (B,S,ds)
+    csel = sel[..., dtr + ds:]                                 # (B,S,ds)
+    return x, z, dt, bsel, csel, new_conv_state
+
+
+def mamba(p: dict, cfg: ModelConfig, h_in: jax.Array, *,
+          state: jax.Array | None = None, conv_state: jax.Array | None = None):
+    """Mamba block. Full-sequence mode (state=None) or decode mode (state
+    (B, di, ds), conv_state (B, k-1, di), h_in (B, 1, D)).
+    Returns (out, (state, conv_state))."""
+    di = cfg.ssm_expand * cfg.d_model
+    ds = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", h_in, p["in_proj"].astype(h_in.dtype))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (di, ds)
+
+    if state is None:
+        x, z, dt, bsel, csel, conv_out = _mamba_gates(p, cfg, xz)
+        b, s, _ = x.shape
+        c = _chunk_len(s, cfg.ssm_chunk)
+        n_chunks = s // c
+
+        # Chunked scan: the (B, c, di, ds) decay/drive tensors exist only per
+        # chunk inside the (rematted) body — never (B, S, di, ds) at once.
+        def by_chunk(t):  # (B, S, ...) -> (n_chunks, B, c, ...)
+            return t.reshape((b, n_chunks, c) + t.shape[2:]).swapaxes(0, 1)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        def chunk_step(h0, inputs):
+            dt_c, x_c, b_c, c_c = inputs                        # (B,c,...)
+            dec = jnp.exp(dt_c[..., None] * a)                  # (B,c,di,ds)
+            drv = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+            acum, hloc = jax.lax.associative_scan(combine, (dec, drv), axis=1)
+            hs = hloc + acum * h0[:, None]                      # (B,c,di,ds)
+            y_c = jnp.einsum("bcdn,bcn->bcd", hs, c_c)          # (B,c,di)
+            return hs[:, -1], y_c
+
+        chunk_step = jax.checkpoint(chunk_step)
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+        new_state, ys = jax.lax.scan(
+            chunk_step, h0,
+            (by_chunk(dt.astype(jnp.float32)), by_chunk(x.astype(jnp.float32)),
+             by_chunk(bsel.astype(jnp.float32)), by_chunk(csel.astype(jnp.float32))),
+            unroll=rf.scan_unroll(n_chunks))
+        y = ys.swapaxes(0, 1).reshape(b, s, di)
+    else:
+        x, z, dt, bsel, csel, conv_out = _mamba_gates(p, cfg, xz, conv_state)
+        dta = dt[:, 0].astype(jnp.float32)                      # (B,di)
+        decay = jnp.exp(dta[..., None] * a)                     # (B,di,ds)
+        drive = (dta * x[:, 0].astype(jnp.float32))[..., None] * \
+            bsel[:, 0].astype(jnp.float32)[:, None, :]
+        new_state = decay * state + drive
+        y = jnp.einsum("bdn,bn->bd", new_state, csel[:, 0].astype(jnp.float32))[:, None]
+
+    y = y.astype(h_in.dtype) + x * p["d_skip"].astype(h_in.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(h_in.dtype))
+    return out, (new_state, conv_out)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "wq": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "wk": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "wv": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "wi": TensorSpec((d, h), ("embed", "heads"), scale=d ** -0.5),
+        "wf": TensorSpec((d, h), ("embed", "heads"), scale=d ** -0.5),
+        "wo_gate": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "out": TensorSpec((h, hd, d), ("heads", "qkv", "embed")),
+    }
+
+
+def mlstm(p: dict, cfg: ModelConfig, h_in: jax.Array, *,
+          state: tuple[jax.Array, jax.Array] | None = None):
+    """mLSTM. Training: chunkwise parallel. Decode: state=(C (B,H,hd,hd),
+    n (B,H,hd)), h_in (B,1,D). Returns (out, (C, n))."""
+    b, s, d = h_in.shape
+    nh, hd = cfg.n_heads, cfg.resolved_head_dim
+    dt = h_in.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", h_in, p["wq"].astype(dt)) * (hd ** -0.5)
+    k = jnp.einsum("bsd,dhk->bhsk", h_in, p["wk"].astype(dt)) * (hd ** -0.5)
+    v = jnp.einsum("bsd,dhk->bhsk", h_in, p["wv"].astype(dt))
+    logi = jnp.einsum("bsd,dh->bhs", h_in, p["wi"].astype(dt)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bhs", h_in, p["wf"].astype(dt)).astype(jnp.float32))
+
+    if state is None:
+        c = _chunk_len(s, cfg.ssm_chunk)
+        n_chunks = s // c
+
+        def reshape_c(x):  # (B,H,S,...) -> (n_chunks, B,H,c,...)
+            return x.reshape(x.shape[:2] + (n_chunks, c) + x.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+
+        qc, kc, vc = reshape_c(q), reshape_c(k), reshape_c(v)
+        lic, lfc = reshape_c(logi), reshape_c(logf)
+
+        def chunk(carry, xs):
+            C0, n0 = carry                                     # (B,H,hd,hd),(B,H,hd)
+            qq, kk, vv, li, lf = xs
+            fcum = jnp.cumsum(lf, axis=-1)                     # (B,H,c)
+            # intra-chunk: scores_ij = exp(fcum_i - fcum_j + i_j) for i >= j
+            logD = fcum[..., :, None] - fcum[..., None, :] + li[..., None, :]
+            mask = jnp.tril(jnp.ones((c, c), bool))
+            logD = jnp.where(mask, logD, -jnp.inf)
+            stab = jnp.maximum(jnp.max(logD, axis=-1, keepdims=True), fcum[..., :, None])
+            D = jnp.exp(logD - stab)                           # (B,H,c,c)
+            # dots stay bf16 with f32 accumulation: halves HBM traffic vs
+            # materializing f32 operands (measured; EXPERIMENTS §Perf xlstm)
+            f32 = jnp.float32
+            scores = jnp.einsum("bhik,bhjk->bhij", qq, kk,
+                                preferred_element_type=f32) * D
+            y_intra = jnp.einsum("bhij,bhjk->bhik", scores.astype(qq.dtype),
+                                 vv, preferred_element_type=f32)
+            # inter-chunk contribution
+            inter_w = jnp.exp(fcum[..., :, None] - stab)        # (B,H,c,1)
+            y_inter = jnp.einsum("bhik,bhkl->bhil", qq,
+                                 C0.astype(qq.dtype),
+                                 preferred_element_type=f32) * inter_w
+            nrm = jnp.einsum("bhik,bhk->bhi", qq, n0.astype(qq.dtype),
+                             preferred_element_type=f32)[..., None] * inter_w \
+                + jnp.einsum("bhij->bhi", scores)[..., None]
+            # scores/nrm carry an exp(-stab) scale; the xLSTM "max(|n q|, 1)"
+            # floor is 1 in RAW units = exp(-stab) in stabilized units.
+            y = (y_intra + y_inter) / jnp.maximum(jnp.abs(nrm), jnp.exp(-stab))
+            # state update to end of chunk
+            ftot = fcum[..., -1:]                              # (B,H,1)
+            wdec = jnp.exp(ftot - fcum + li)                   # (B,H,c)
+            kw = kk * wdec[..., None].astype(kk.dtype)
+            C1 = jnp.exp(ftot)[..., None] * C0 + jnp.einsum(
+                "bhjk,bhjl->bhkl", kw, vv, preferred_element_type=f32)
+            n1 = jnp.exp(ftot) * n0 + jnp.sum(kw.astype(f32), axis=-2)
+            return (C1, n1), y
+
+        C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        (Cf, nf), ys = jax.lax.scan(chunk, (C0, n0), (qc, kc, vc, lic, lfc),
+                                    unroll=rf.scan_unroll(n_chunks))
+        y = ys.swapaxes(0, 2).swapaxes(0, 1).reshape(b, nh, s, hd)
+        new_state = (Cf, nf)
+    else:
+        C0, n0 = state
+        i1 = jnp.exp(logi[..., 0])                             # (B,H)
+        f1 = jnp.exp(logf[..., 0])
+        C1 = f1[..., None, None] * C0 + i1[..., None, None] * jnp.einsum(
+            "bhk,bhl->bhkl", k[:, :, 0].astype(jnp.float32), v[:, :, 0].astype(jnp.float32))
+        n1 = f1[..., None] * n0 + i1[..., None] * k[:, :, 0].astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkl->bhl", q[:, :, 0].astype(jnp.float32), C1)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, :, 0].astype(jnp.float32), n1))
+        y = (num / jnp.maximum(den, 1.0)[..., None])[:, :, None, :]
+        new_state = (C1, n1)
+
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bhsk", h_in, p["wo_gate"].astype(dt)))
+    y = (y.astype(dt) * o).swapaxes(1, 2)                      # (B,S,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["out"].astype(dt))
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory, sequential recurrence)
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "wz": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "wi": TensorSpec((d, h, hd), ("embed", "heads", "qkv"), scale=d ** -0.5),
+        "wf": TensorSpec((d, h, hd), ("embed", "heads", "qkv"), scale=d ** -0.5),
+        "wo": TensorSpec((d, h, hd), ("embed", "heads", "qkv")),
+        # head-local recurrent mats, FUSED (z|i|f) so the sequential scan
+        # does ONE (hd, 3hd) matmul per step instead of three (§Perf xlstm)
+        "r": TensorSpec((h, hd, 3 * hd), ("heads", "qkv", None), scale=hd ** -0.5),
+        "out": TensorSpec((h, hd, d), ("heads", "qkv", "embed")),
+    }
+
+
+def _slstm_step(r, carry, xs):
+    """One sLSTM step. carry = (h, c, n) f32; xs = gate preactivations."""
+    from repro.parallel.sharding import constrain_state
+    hp, cp, np_ = carry
+    pz, pi, pf, po = (t.astype(jnp.float32) for t in xs)
+    rec = jnp.einsum("bhk,hkl->bhl", hp.astype(r.dtype), r,
+                     preferred_element_type=jnp.float32)
+    rz_, ri_, rf_ = jnp.split(rec, 3, axis=-1)
+    z = jnp.tanh(pz + rz_)
+    i = jnp.exp(jnp.minimum(pi + ri_, 10.0))
+    f = jax.nn.sigmoid(pf + rf_)
+    o = jax.nn.sigmoid(po)
+    c = f * cp + i * z
+    n = f * np_ + i
+    hh = o * c / jnp.maximum(n, 1.0)
+    # pin the carry: GSPMD otherwise shards hd over "model" and pays a
+    # partial-sum all-reduce of the recurrence EVERY timestep
+    hh, c, n = (constrain_state(t) for t in (hh, c, n))
+    return (hh, c, n), hh
+
+
+@jax.custom_vjp
+def _slstm_scan(r, preacts, state):
+    """Sequential sLSTM scan with a HAND-WRITTEN backward pass.
+
+    Autodiff of the scan makes GSPMD emit a partial-sum all-reduce of the
+    (H, hd, 3hd) weight-gradient at EVERY timestep (measured 1.24 TB/step on
+    xlstm-350m x train_4k). The custom VJP replays the recurrence forward
+    (remat), runs one reverse scan for the per-step cotangents, and computes
+    the weight gradient as a SINGLE stacked einsum after the loop."""
+    (hf, cf, nf), ys = jax.lax.scan(lambda c, x: _slstm_step(r, c, x),
+                                    state, preacts)
+    return (hf, cf, nf), ys
+
+
+def _slstm_scan_fwd(r, preacts, state):
+    out = _slstm_scan(r, preacts, state)
+    return out, (r, preacts, state)
+
+
+def _slstm_scan_bwd(res, cots):
+    r, preacts, state = res
+    (d_hf, d_cf, d_nf), d_ys = cots
+
+    # re-run forward saving per-step (h_prev, c_prev, n_prev) [remat]
+    def fwd_step(carry, xs):
+        new_carry, hh = _slstm_step(r, carry, xs)
+        return new_carry, carry             # ys = state BEFORE the step
+    _, prevs = jax.lax.scan(lambda c, x: fwd_step(c, x), state, preacts)
+
+    def bwd_step(carry, xs):
+        d_h, d_c, d_n = carry
+        (pz, pi, pf, po), (hp, cp, np_) = xs
+        # recompute step-internal values
+        rec = jnp.einsum("bhk,hkl->bhl", hp.astype(r.dtype), r,
+                         preferred_element_type=jnp.float32)
+        rz_, ri_, rf_ = jnp.split(rec, 3, axis=-1)
+        az = pz + rz_
+        ai = jnp.minimum(pi + ri_, 10.0)
+        z = jnp.tanh(az)
+        i = jnp.exp(ai)
+        f = jax.nn.sigmoid(pf + rf_)
+        o = jax.nn.sigmoid(po)
+        c = f * cp + i * z
+        n = f * np_ + i
+        nmax = jnp.maximum(n, 1.0)
+        # hh = o * c / nmax
+        d_o = d_h * c / nmax
+        d_c = d_c + d_h * o / nmax
+        d_nmax = -d_h * o * c / (nmax * nmax)
+        d_n = d_n + jnp.where(n > 1.0, d_nmax, 0.0)
+        # c = f c_p + i z ; n = f n_p + i
+        d_f = d_c * cp + d_n * np_
+        d_i = d_c * z + d_n
+        d_z = d_c * i
+        d_cp = d_c * f
+        d_np = d_n * f
+        # gates
+        d_az = d_z * (1.0 - z * z)
+        d_ai = jnp.where(pi + ri_ < 10.0, d_i * i, 0.0)
+        d_af = d_f * f * (1.0 - f)
+        d_po = d_o * o * (1.0 - o)
+        d_rec = jnp.concatenate([d_az, d_ai, d_af], axis=-1)   # (B,H,3hd)
+        d_hp = jnp.einsum("bhl,hkl->bhk", d_rec.astype(r.dtype), r,
+                          preferred_element_type=jnp.float32)
+        return (d_hp, d_cp, d_np), (d_az, d_ai, d_af, d_po, d_rec)
+
+    # d_ys[t] adds to the h-cotangent entering step t's backward:
+    def bwd_step2(carry, xs):
+        d_h, d_c, d_n = carry
+        (pre, prev, dy) = xs
+        (d_hp, d_cp, d_np), outs = bwd_step((d_h + dy, d_c, d_n), (pre, prev))
+        return (d_hp, d_cp, d_np), outs
+
+    (d_h0, d_c0, d_n0), (d_pz, d_pi, d_pf, d_po, d_recs) = jax.lax.scan(
+        bwd_step2, (d_hf, d_cf, d_nf), (preacts, prevs, d_ys), reverse=True)
+
+    # weight gradient: ONE einsum over the stacked sequence (no per-step AR)
+    h_prevs = prevs[0]                                        # (S,B,H,hd)
+    d_r = jnp.einsum("sbhk,sbhl->hkl", h_prevs.astype(jnp.float32),
+                     d_recs.astype(jnp.float32)).astype(r.dtype)
+    return d_r, (d_pz, d_pi, d_pf, d_po), (d_h0, d_c0, d_n0)
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm(p: dict, cfg: ModelConfig, h_in: jax.Array, *,
+          state: tuple | None = None):
+    """sLSTM with head-local recurrence. state = (h, c, n) each (B,H,hd).
+    Sequential over time by construction."""
+    b, s, d = h_in.shape
+    nh, hd = cfg.n_heads, cfg.resolved_head_dim
+    dt = h_in.dtype
+    pre_z = jnp.einsum("bsd,dhk->sbhk", h_in, p["wz"].astype(dt)).astype(jnp.float32)
+    pre_i = jnp.einsum("bsd,dhk->sbhk", h_in, p["wi"].astype(dt)).astype(jnp.float32)
+    pre_f = jnp.einsum("bsd,dhk->sbhk", h_in, p["wf"].astype(dt)).astype(jnp.float32)
+    from repro.parallel.sharding import constrain_time_major
+    pre_o = jnp.einsum("bsd,dhk->sbhk", h_in, p["wo"].astype(dt)).astype(jnp.float32)
+    if s > 1:
+        pre_z, pre_i, pre_f, pre_o = (constrain_time_major(t) for t in
+                                      (pre_z, pre_i, pre_f, pre_o))
+    r = p["r"].astype(dt)  # bf16 recurrence matmul, f32 accumulation
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (h0, h0, h0 + 1.0)
+
+    (hf, cf, nf), ys = _slstm_scan(r, (pre_z, pre_i, pre_f, pre_o), state)
+    y = ys.swapaxes(0, 1).astype(dt)                           # (B,S,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["out"].astype(dt))
+    return out, (hf, cf, nf)

@@ -1,0 +1,147 @@
+"""AdamW with cosine schedule, global-norm clipping, optional low-precision
+moments, gradient accumulation, and int8 gradient compression with error
+feedback (the distributed-optimization tricks, DESIGN.md §6).
+
+Optimizer state shards exactly like the parameters (ZeRO: m/v inherit the
+param PartitionSpec), so no extra sharding rules are needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "bfloat16"    # m/v dtype (memory at 398B scale)
+    grad_dtype: str = "float32"       # accumulation dtype (bf16 at 398B scale)
+    accum_steps: int = 1
+    compress_grads: bool = False      # int8 + error feedback (for cross-pod DP)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    error: Any | None = None          # compression error-feedback buffers
+
+
+def _mdt(cfg: OptConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def init_opt_state(cfg: OptConfig, params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, _mdt(cfg))
+    err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if cfg.compress_grads else None
+    return OptState(step=jnp.int32(0),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    error=err)
+
+
+def abstract_opt_state(cfg: OptConfig, abstract_params) -> OptState:
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, _mdt(cfg))
+    err = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                       abstract_params) if cfg.compress_grads else None
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=jax.tree.map(zeros, abstract_params),
+                    v=jax.tree.map(zeros, abstract_params),
+                    error=err)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step.astype(jnp.float32) - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, clip: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# --- int8 gradient compression with error feedback --------------------------
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error):
+    """Quantize (grad + carried error); new error = residual. The quantized
+    grads are what cross-pod data-parallel all-reduces would ship (int8 = 4x
+    less DP traffic); decompressed values feed the optimizer."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = compress_int8(target)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), target - deq
+
+    flat = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_err
+
+
+def apply_updates(cfg: OptConfig, params, grads, opt: OptState):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    if cfg.compress_grads and opt.error is not None:
+        grads, new_error = compress_with_feedback(grads, opt.error)
+    else:
+        new_error = opt.error
+
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    new_opt = OptState(step=step, m=new_m, v=new_v, error=new_error)
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

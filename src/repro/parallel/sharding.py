@@ -1,0 +1,276 @@
+"""Sharding rules: logical tensor axes -> mesh axes (DESIGN.md §6).
+
+Training layout (MaxText-class): FSDP/ZeRO-3 over the data axes ("pod" and
+"data" compose for multi-pod), tensor parallelism over "model", expert
+parallelism over "model" for the MoE expert dim. Serving layouts shard KV
+caches batch-over-data and sequence-over-model (SP-decode) because kv-head
+counts (1, 4, 8, 10) rarely divide a 16-wide model axis.
+
+Divisibility guard: a mesh axis is only applied to a tensor dim it divides
+evenly; otherwise the rule degrades (prefix of the axis tuple, then
+replicated). MQA (kv=1) and small head counts fall out automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.spec import TensorSpec, is_spec
+
+
+# logical axis -> mesh axes (tuples compose). None = replicate.
+TRAIN_RULES: dict[str | None, Any] = {
+    "embed": ("pod", "data"),     # FSDP: parameters sharded over data axes
+    "mlp": "model",               # TP: ffn hidden
+    "heads": "model",             # TP: attention heads
+    "kv": "model",
+    "qkv": None,
+    "vocab": "model",             # TP: vocab/logits
+    "experts": "model",           # EP
+    "layers": None,
+    None: None,
+}
+
+# Serving: weights stay FSDP+TP sharded (gathered on use); activations are
+# batch-sharded. Same param rules work for decode.
+SERVE_RULES = TRAIN_RULES
+
+
+def _mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(mesh.shape)  # works for Mesh and AbstractMesh
+
+
+def _fit_axes(dim: int, want, sizes: dict[str, int]):
+    """Return the longest prefix of mesh axes whose product divides dim."""
+    if want is None:
+        return None
+    axes = (want,) if isinstance(want, str) else tuple(want)
+    out = []
+    prod = 1
+    for a in axes:
+        if a not in sizes:
+            continue
+        if dim % (prod * sizes[a]) == 0:
+            out.append(a)
+            prod *= sizes[a]
+        else:
+            break
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def pspec_for(spec: TensorSpec, mesh: Mesh, rules: dict | None = None) -> P:
+    rules = rules or TRAIN_RULES
+    sizes = _mesh_axis_sizes(mesh)
+    entries = []
+    used: set[str] = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        want = rules.get(ax)
+        fit = _fit_axes(dim, want, sizes)
+        # a mesh axis may appear at most once per PartitionSpec
+        if fit is not None:
+            flat = (fit,) if isinstance(fit, str) else fit
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            fit = None if not flat else (flat if len(flat) > 1 else flat[0])
+        entries.append(fit)
+    return P(*entries)
+
+
+def param_pspecs(spec_tree, mesh: Mesh, rules: dict | None = None):
+    return jax.tree_util.tree_map(
+        lambda s: pspec_for(s, mesh, rules), spec_tree, is_leaf=is_spec)
+
+
+def param_shardings(spec_tree, mesh: Mesh, rules: dict | None = None):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, pspec_for(s, mesh, rules)),
+        spec_tree, is_leaf=is_spec)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_pspec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Batch dim over the data axes (when divisible), rest replicated."""
+    sizes = _mesh_axis_sizes(mesh)
+    axes = batch_axes(mesh)
+    prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    first = axes if axes and batch % prod == 0 else None
+    if first is not None and len(first) == 1:
+        first = first[0]
+    return P(first, *([None] * (ndim - 1)))
+
+
+def cache_pspec(mesh: Mesh, leaf_shape: tuple[int, ...],
+                batch_dim: int = 1) -> P:
+    """Decode-cache layout: batch over data axes if divisible; the largest
+    remaining dim (sequence / d_inner / head_dim) over "model" if divisible.
+    Stacked caches are (n_groups, B, ...) => batch_dim=1 by default; the
+    non-scanned layer0 cache is (B, ...) => batch_dim=0."""
+    sizes = _mesh_axis_sizes(mesh)
+    axes = batch_axes(mesh)
+    dprod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    entries: list = [None] * len(leaf_shape)
+    bd = min(batch_dim, len(leaf_shape) - 1)
+    if axes and leaf_shape[bd] % dprod == 0:
+        entries[bd] = axes if len(axes) > 1 else axes[0]
+    m = sizes.get("model", 1)
+    if m > 1 and len(leaf_shape) > bd + 1:
+        # largest dim after the batch dim divisible by the model axis
+        cands = [(d, i) for i, d in enumerate(leaf_shape[bd + 1:], start=bd + 1)
+                 if d % m == 0]
+        if cands:
+            _, idx = max(cands)
+            entries[idx] = "model"
+    return P(*entries)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    def leaf_sharding(path, x):
+        bd = 0 if "layer0" in jax.tree_util.keystr(path) else 1
+        return NamedSharding(mesh, cache_pspec(mesh, tuple(x.shape), bd))
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, cache_tree)
+
+
+def decode_score_pspec(mesh: Mesh) -> P:
+    """(B, H, 1, S_kv) decode scores: flash-decode — batch over data,
+    KV-seq over model, softmax reduced with tiny cross-shard collectives.
+    Without this GSPMD gathers the whole seq-sharded KV cache per layer."""
+    axes = batch_axes(mesh)
+    first = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(first, None, None, "model")
+
+
+# --- activation sharding constraint (sequence parallelism) ------------------
+# The residual-stream scan carry is L × (B, S, D); at 94 layers it only fits
+# HBM if sharded over "model" too (Megatron-SP). The launcher/dry-run sets
+# the constraint; unit tests (no mesh) leave it unset.
+
+_ACTIVATION_PSPEC: P | None = None
+
+
+def set_activation_pspec(spec: P | None) -> None:
+    global _ACTIVATION_PSPEC
+    _ACTIVATION_PSPEC = spec
+
+
+def constrain_activation(x: jax.Array) -> jax.Array:
+    if _ACTIVATION_PSPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACTIVATION_PSPEC)
+
+
+def default_activation_pspec(mesh: Mesh, seq_divisible: bool = True) -> P:
+    """(B, S, D) residual stream: batch over data axes, seq over model."""
+    axes = batch_axes(mesh)
+    first = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(first, "model" if seq_divisible else None, None)
+
+
+# Megatron-SP boundary: the residual stream between blocks is seq-sharded
+# (constrain_activation); attention inputs are explicitly gathered back to
+# seq-replicated so q/k/v can shard over heads — GSPMD cannot reshard
+# seq->heads through the GQA broadcast+reshape on its own.
+_ATTN_IN_PSPEC: P | None = None
+
+
+def set_attn_input_pspec(spec: P | None) -> None:
+    global _ATTN_IN_PSPEC
+    _ATTN_IN_PSPEC = spec
+
+
+def constrain_attn_input(x: jax.Array) -> jax.Array:
+    if _ATTN_IN_PSPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ATTN_IN_PSPEC)
+
+
+def default_attn_input_pspec(mesh: Mesh) -> P:
+    axes = batch_axes(mesh)
+    first = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(first, None, None)
+
+
+# Block-input pin (always on for train/prefill, all mixer kinds): (B, S, D)
+# batch-over-data, feature dim REPLICATED. Without it GSPMD sometimes shards
+# the contraction dim of the qkv/in_proj einsums over "model" and pays a
+# partial-sum all-reduce of a (B, hd, S, S)-sized tensor per projection
+# (measured 1.65 TB/step on xlstm-350m).
+_BLOCK_IN_PSPEC: P | None = None
+
+
+def set_block_input_pspec(spec: P | None) -> None:
+    global _BLOCK_IN_PSPEC
+    _BLOCK_IN_PSPEC = spec
+
+
+def constrain_block_input(x: jax.Array) -> jax.Array:
+    if _BLOCK_IN_PSPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _BLOCK_IN_PSPEC)
+
+
+def constrain_state(x: jax.Array) -> jax.Array:
+    """(B, ...) recurrent-state tensors: batch over data, rest replicated —
+    pins the sLSTM scan carry so its feature dim never lands on "model"."""
+    if _BLOCK_IN_PSPEC is None:
+        return x
+    first = _BLOCK_IN_PSPEC[0]
+    return jax.lax.with_sharding_constraint(
+        x, P(*((first,) + (None,) * (x.ndim - 1))))
+
+
+def constrain_time_major(x: jax.Array) -> jax.Array:
+    """(S, B, ...) tensors (sLSTM gate preactivations): batch over data,
+    everything else replicated. Stops GSPMD from sharding the recurrent
+    state's feature dim over "model" (which costs a partial-sum all-reduce
+    EVERY timestep — measured 1.24 TB/step on xlstm-350m)."""
+    if _BLOCK_IN_PSPEC is None:
+        return x
+    first = _BLOCK_IN_PSPEC[0]
+    return jax.lax.with_sharding_constraint(
+        x, P(*((None, first) + (None,) * (x.ndim - 2))))
+
+
+# (B, H, S_q, S_kv) attention scores: batch over data, query-seq over model.
+# Query-seq (not heads) because head counts (40, 16, 48...) rarely divide the
+# model axis, while S is always a power-of-two multiple of it.
+_SCORE_PSPEC: P | None = None
+_DECODE_SCORE_PSPEC: P | None = None
+
+
+def set_score_pspec(spec: P | None) -> None:
+    global _SCORE_PSPEC
+    _SCORE_PSPEC = spec
+
+
+def set_decode_score_pspec(spec: P | None) -> None:
+    global _DECODE_SCORE_PSPEC
+    _DECODE_SCORE_PSPEC = spec
+
+
+def constrain_scores(x: jax.Array, decode: bool = False) -> jax.Array:
+    spec = _DECODE_SCORE_PSPEC if decode else _SCORE_PSPEC
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def default_score_pspec(mesh: Mesh, n_heads: int | None = None) -> P:
+    """(B, H, S_q, S_kv): shard heads over "model" when divisible (Megatron
+    attention — dk/dv stay local); else shard query-seq (costs a dk/dv
+    all-reduce in backward, but never replicates the S x S tensor)."""
+    axes = batch_axes(mesh)
+    first = axes if len(axes) > 1 else (axes[0] if axes else None)
+    m = _mesh_axis_sizes(mesh).get("model", 1)
+    if n_heads is not None and n_heads % m == 0:
+        return P(first, "model", None, None)
+    return P(first, None, "model", None)

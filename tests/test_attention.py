@@ -1,0 +1,130 @@
+"""Attention unit tests: blockwise (flash) vs dense equivalence, GQA
+broadcast, softcap, RoPE properties, custom-VJP sLSTM gradients."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models.attention as A
+import repro.models.ssm as S
+from repro.configs import get_config
+from repro.models.layers import rope
+from repro.models.spec import init_params
+
+
+@pytest.fixture(autouse=True)
+def small_chunks(monkeypatch):
+    monkeypatch.setattr(A, "Q_CHUNK", 16)
+    monkeypatch.setattr(A, "KV_CHUNK", 16)
+
+
+def _qkv(rng, b, s, h, kv, hd):
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window,causal", [(None, True), (24, True),
+                                           (None, False)])
+def test_chunked_attention_matches_dense(window, causal):
+    cfg = get_config("gemma2-9b").smoke()
+    q, k, v = _qkv(np.random.default_rng(0), 2, 64, 4, 4, 16)
+    dense = A._sdpa(cfg, q, k, v,
+                    A._causal_mask(64, window) if causal else None)
+    chunked = A._sdpa_chunked(cfg, q, k, v, window=window, causal=causal)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+
+
+def test_chunked_attention_gqa():
+    cfg = get_config("gemma2-9b").smoke()
+    q, k, v = _qkv(np.random.default_rng(1), 2, 64, 8, 4, 16)  # rep=2
+    dense = A._sdpa(cfg, q, k, v, A._causal_mask(64, None))
+    chunked = A._sdpa_chunked(cfg, q, k, v, window=None, causal=True)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+
+
+def test_chunked_attention_gradients_match():
+    cfg = get_config("gemma2-9b").smoke()
+    q, k, v = _qkv(np.random.default_rng(2), 1, 32, 2, 2, 8)
+
+    def f_dense(q):
+        return jnp.sum(A._sdpa(cfg, q, k, v, A._causal_mask(32, None)) ** 2)
+
+    def f_chunk(q):
+        return jnp.sum(A._sdpa_chunked(cfg, q, k, v, window=None,
+                                       causal=True) ** 2)
+
+    g1 = jax.grad(f_dense)(q)
+    g2 = jax.grad(f_chunk)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_softcap_attention_applies_in_chunks():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("gemma2-9b").smoke(),
+                              attn_softcap=5.0)
+    q, k, v = _qkv(np.random.default_rng(3), 1, 32, 2, 2, 8)
+    dense = A._sdpa(cfg, q * 4, k, v, A._causal_mask(32, None))
+    chunked = A._sdpa_chunked(cfg, q * 4, k, v, window=None, causal=True)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: <rope(q, m), rope(k, n)> depends only on m - n."""
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = rope(q, jnp.full((1, 1), m), 10000.0)
+        kn = rope(k, jnp.full((1, 1), n), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+    assert dot_at(7, 0) == pytest.approx(dot_at(57, 50), rel=1e-4)
+
+
+def test_slstm_custom_vjp_matches_autodiff():
+    """The hand-written sLSTM backward (EXPERIMENTS §Perf xlstm v2b) must be
+    exact against plain autodiff of the same step function."""
+    cfg = get_config("xlstm-350m").smoke()
+    params = init_params({"s": S.slstm_spec(cfg)}, jax.random.PRNGKey(0),
+                         jnp.float32)["s"]
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 12, cfg.d_model)), jnp.float32)
+
+    def loss_custom(params, x):
+        out, _ = S.slstm(params, cfg, x)
+        return jnp.sum(out ** 2)
+
+    def slstm_ref(p, h_in):
+        b, s, d = h_in.shape
+        dt = h_in.dtype
+        pre = [jnp.einsum("bsd,dhk->sbhk", h_in, p[k_].astype(dt)).astype(jnp.float32)
+               for k_ in ("wz", "wi", "wf", "wo")]
+        r = p["r"].astype(dt)
+        h0 = jnp.zeros((b, cfg.n_heads, cfg.resolved_head_dim), jnp.float32)
+        (hf, cf, nf), ys = jax.lax.scan(
+            lambda c, xx: S._slstm_step(r, c, xx), (h0, h0, h0 + 1.0),
+            tuple(pre))
+        y = ys.swapaxes(0, 1).astype(dt)
+        return jnp.einsum("bshk,hkd->bsd", y, p["out"].astype(dt))
+
+    def loss_ref(params, x):
+        return jnp.sum(slstm_ref(params, x) ** 2)
+
+    v1, g1 = jax.value_and_grad(loss_custom)(params, x)
+    v2, g2 = jax.value_and_grad(loss_ref)(params, x)
+    assert float(v1) == pytest.approx(float(v2), rel=1e-6)
+    for kk in g1:
+        np.testing.assert_allclose(np.asarray(g1[kk]), np.asarray(g2[kk]),
+                                   atol=2e-5, err_msg=kk)
+    gx1 = jax.grad(loss_custom, argnums=1)(params, x)
+    gx2 = jax.grad(loss_ref, argnums=1)(params, x)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2), atol=2e-5)

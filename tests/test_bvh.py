@@ -1,0 +1,172 @@
+"""LBVH structural invariants + traversal correctness (paper §4.2)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bvh import build_bvh, SENTINEL
+from repro.core.traversal import (
+    pair_traverse_sphere,
+    traverse_sphere_stack,
+    traverse_sphere_stackless,
+)
+
+
+def _build(pts):
+    lo = pts.min(0) - 1e-4
+    hi = pts.max(0) + 1e-4
+    return build_bvh(jnp.asarray(pts), jnp.asarray(lo), jnp.asarray(hi))
+
+
+def _rand(n, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, 3)).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [2, 3, 7, 64, 257])
+@pytest.mark.parametrize("use_64bit", [False, True])
+def test_bvh_structure(n, use_64bit):
+    pts = _rand(n, seed=n)
+    lo = pts.min(0) - 1e-4
+    hi = pts.max(0) + 1e-4
+    bvh = build_bvh(jnp.asarray(pts), jnp.asarray(lo), jnp.asarray(hi), use_64bit=use_64bit)
+
+    left = np.asarray(bvh.left_child)
+    right = np.asarray(bvh.right_child)
+    # Every node except the root has exactly one parent.
+    seen = np.concatenate([left, right])
+    counts = np.bincount(seen, minlength=2 * n - 1)
+    assert counts[0] == 0  # root
+    assert (counts[1:] == 1).all()
+
+    # perm is a permutation.
+    np.testing.assert_array_equal(np.sort(np.asarray(bvh.leaf_perm)), np.arange(n))
+
+    # Internal AABBs contain children AABBs.
+    nlo, nhi = np.asarray(bvh.node_lo), np.asarray(bvh.node_hi)
+    for i in range(n - 1):
+        for c in (left[i], right[i]):
+            assert (nlo[i] <= nlo[c] + 1e-6).all()
+            assert (nhi[i] >= nhi[c] - 1e-6).all()
+
+    # Root AABB covers the scene.
+    assert (nlo[0] <= pts.min(0) + 1e-6).all() and (nhi[0] >= pts.max(0) - 1e-6).all()
+
+
+@pytest.mark.parametrize("n", [2, 5, 64, 130])
+def test_ropes_visit_all_leaves_in_order(n):
+    """Following left-child on every internal node and ropes otherwise must
+    enumerate all leaves exactly once, left to right — the rope invariant."""
+    pts = _rand(n, seed=n + 1)
+    bvh = _build(pts)
+    left = np.asarray(bvh.left_child)
+    rope = np.asarray(bvh.rope)
+    node, seen = 0, []
+    while node != int(SENTINEL):
+        if node >= n - 1:
+            seen.append(node - (n - 1))
+            node = int(rope[node])
+        else:
+            node = int(left[node])  # always "hit"
+        assert len(seen) <= n
+    assert seen == list(range(n))
+
+
+@pytest.mark.parametrize("n", [2, 33, 128])
+@pytest.mark.parametrize("which", ["stack", "stackless"])
+def test_sphere_traversal_counts_match_bruteforce(n, which):
+    pts = _rand(n, seed=7 * n)
+    bvh = _build(pts)
+    eps = 0.3
+    eps2 = eps * eps
+    jp = jnp.asarray(pts)
+
+    def run(center):
+        def fn(count, j, _s):
+            hit = jnp.sum((jp[j] - center) ** 2) <= eps2
+            return count + hit.astype(jnp.int32), jnp.bool_(False)
+        trav = traverse_sphere_stack if which == "stack" else traverse_sphere_stackless
+        return trav(bvh, center[None], eps, fn, jnp.int32(0))[0]
+
+    import jax
+    got = np.asarray(jax.vmap(run)(jp))
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    want = (d2 <= eps2).sum(1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_early_termination_saturates():
+    """§4.1.2: traversal must stop once the callback reports done."""
+    import jax
+    pts = _rand(100, seed=3)
+    bvh = _build(pts)
+    jp = jnp.asarray(pts)
+    cap = 3
+
+    def run(center):
+        def fn(count, j, _s):
+            hit = jnp.sum((jp[j] - center) ** 2) <= 1.0  # everything hits
+            c = count + hit.astype(jnp.int32)
+            return c, c >= cap
+        return traverse_sphere_stackless(bvh, center[None], 2.0, fn, jnp.int32(0))[0]
+
+    got = np.asarray(jax.vmap(run)(jp))
+    assert (got == cap).all()
+
+
+@given(st.integers(2, 80), st.floats(0.02, 0.6))
+@settings(max_examples=25, deadline=None)
+def test_pair_traversal_each_pair_exactly_once(n, eps):
+    """Property (paper §4.2.3): pair traversal finds each ε-pair (i<j) exactly
+    once, none missed, none duplicated."""
+    pts = _rand(n, seed=n)
+    bvh = _build(pts)
+    jp = jnp.asarray(pts)
+    eps2 = eps * eps
+    cap = max(8, n)
+
+    def fn(carry, i, j):
+        buf, cnt = carry
+        hit = jnp.sum((jp[j] - jp[i]) ** 2) <= eps2
+        slot = jnp.clip(cnt, 0, cap - 1)
+        buf = jnp.where(hit, buf.at[slot].set(j), buf)
+        return (buf, cnt + hit.astype(jnp.int32)), jnp.bool_(False)
+
+    buf0 = jnp.full((cap,), -1, jnp.int32)
+    buf, cnt = pair_traverse_sphere(bvh, jp, eps, fn, (buf0, jnp.int32(0)))
+    buf, cnt = np.asarray(buf), np.asarray(cnt)
+    perm = np.asarray(bvh.leaf_perm)
+    got = []
+    for k in range(n):
+        i = perm[k]
+        for s in range(cnt[k]):
+            a, b = min(i, buf[k, s]), max(i, buf[k, s])
+            got.append((a, b))
+    assert len(got) == len(set(got))  # exactly once
+
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    want = {(i, j) for i in range(n) for j in range(i + 1, n) if d2[i, j] <= eps2}
+    assert set(got) == want
+
+
+def test_32bit_collapse_does_not_break_correctness():
+    """Many identical Morton codes (degenerate clustered data) must still give
+    a valid tree — the paper's motivation for index tie-breaking."""
+    rng = np.random.default_rng(9)
+    base = rng.uniform(0.4, 0.6, (1, 3))
+    pts = (base + rng.normal(0, 1e-7, (300, 3))).astype(np.float32)  # 1 bin at 32-bit
+    lo, hi = pts.min(0) - 0.1, pts.max(0) + 0.1
+    bvh = build_bvh(jnp.asarray(pts), jnp.asarray(lo), jnp.asarray(hi), use_64bit=False)
+    left = np.asarray(bvh.left_child)
+    rope = np.asarray(bvh.rope)
+    n = 300
+    node, cnt = 0, 0
+    while node != int(SENTINEL):
+        if node >= n - 1:
+            cnt += 1
+            node = int(rope[node])
+        else:
+            node = int(left[node])
+        assert cnt <= n
+    assert cnt == n

@@ -1,0 +1,143 @@
+"""DBSCAN variants vs the Ester-semantics numpy oracle (paper §4.3)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dbscan import (
+    NOISE,
+    count_neighbors,
+    dbscan_graph_cc,
+    fdbscan,
+    fdbscan_densebox,
+    fdbscan_pair,
+)
+from repro.core.bvh import build_bvh
+from repro.core.ref_numpy import core_mask_ref, dbscan_ref, labels_equivalent
+from conftest import make_clustered_points
+
+VARIANTS = {
+    "graph_cc": lambda p, e, m: dbscan_graph_cc(p, e, m, neighbor_capacity=256),
+    "fdbscan": lambda p, e, m: fdbscan(p, e, m),
+    "fdbscan_stack": lambda p, e, m: fdbscan(p, e, m, use_stack=True),
+    "fdbscan_32bit": lambda p, e, m: fdbscan(p, e, m, use_64bit=False),
+    "fdbscan_pair": lambda p, e, m: fdbscan_pair(p, e, m, edge_capacity=4),
+    "fdbscan_densebox": lambda p, e, m: fdbscan_densebox(p, e, m),
+}
+
+
+def _check(pts: np.ndarray, eps: float, min_pts: int, variant: str):
+    ref = dbscan_ref(pts, eps, min_pts)
+    core = core_mask_ref(pts, eps, min_pts)
+    res = VARIANTS[variant](jnp.asarray(pts), eps, min_pts)
+    np.testing.assert_array_equal(np.asarray(res.core_mask), core,
+                                  err_msg=f"{variant}: core mask mismatch")
+    assert labels_equivalent(np.asarray(res.labels), ref, core), \
+        f"{variant}: cluster partition mismatch"
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+@pytest.mark.parametrize("min_pts", [2, 5, 10])
+def test_variants_match_oracle_clustered(variant, min_pts, clustered_points):
+    _check(clustered_points[:250], 0.05, min_pts, variant)
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_variants_match_oracle_uniform(variant):
+    pts = np.random.default_rng(5).uniform(0, 1, (200, 3)).astype(np.float32)
+    _check(pts, 0.08, 3, variant)
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_all_noise(variant):
+    # Far-apart points, minPts > 1 cluster size -> everything is noise.
+    pts = (np.arange(24, dtype=np.float32)[:, None] * np.array([[1, 0, 0]], np.float32))
+    res = VARIANTS[variant](jnp.asarray(pts), 0.25, 3)
+    assert (np.asarray(res.labels) == int(NOISE)).all()
+    assert not np.asarray(res.core_mask).any()
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_single_cluster(variant):
+    rng = np.random.default_rng(6)
+    pts = rng.normal(0, 0.01, (50, 3)).astype(np.float32) + 0.5
+    res = VARIANTS[variant](jnp.asarray(pts), 0.2, 5)
+    labels = np.asarray(res.labels)
+    assert (labels == labels[0]).all() and labels[0] != int(NOISE)
+
+
+@pytest.mark.parametrize("min_pts", [2, 4])
+@given(seed=st.integers(0, 2 ** 31 - 1), n=st.integers(20, 120))
+@settings(max_examples=12, deadline=None)
+def test_property_fdbscan_random(min_pts, seed, n):
+    rng = np.random.default_rng(seed)
+    pts = make_clustered_points(rng, n)
+    _check(pts, 0.07, min_pts, "fdbscan")
+
+
+@given(seed=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_property_densebox_random(seed):
+    rng = np.random.default_rng(seed)
+    pts = make_clustered_points(rng, 150)
+    _check(pts, 0.07, 5, "fdbscan_densebox")
+
+
+@given(seed=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_property_pair_random(seed):
+    rng = np.random.default_rng(seed)
+    pts = make_clustered_points(rng, 150)
+    _check(pts, 0.07, 2, "fdbscan_pair")
+
+
+def test_duplicate_points_exact_overlap():
+    """Coincident points (worst-case Morton collapse) must cluster together."""
+    pts = np.zeros((30, 3), np.float32) + 0.5
+    pts[15:] += 0.4  # two coincident piles
+    for variant in ("fdbscan", "fdbscan_densebox"):
+        res = VARIANTS[variant](jnp.asarray(pts), 0.01, 2)
+        labels = np.asarray(res.labels)
+        assert (labels[:15] == labels[0]).all()
+        assert (labels[15:] == labels[15]).all()
+        assert labels[0] != labels[15]
+
+
+def test_count_neighbors_early_termination_saturates(clustered_points):
+    pts = jnp.asarray(clustered_points[:200])
+    lo = pts.min(0) - 1e-4
+    hi = pts.max(0) + 1e-4
+    bvh = build_bvh(pts, lo, hi)
+    full = np.asarray(count_neighbors(bvh, pts, pts, 0.05))
+    sat = np.asarray(count_neighbors(bvh, pts, pts, 0.05, min_pts=5))
+    assert (sat <= np.maximum(full, 5)).all()
+    np.testing.assert_array_equal(sat >= 5, full >= 5)
+
+
+def test_densebox_benchmark_regime_regression():
+    """Regression: at benchmark density (HACC ε convention) DenseBox used to
+    under-merge when a loose point with the SMALLER label sat within ε of a
+    non-head dense member (one-directional hook asymmetry)."""
+    from repro.data.pipeline import hacc_benchmark_epsilon, make_clustered_points
+    pts = make_clustered_points(np.random.default_rng(0), 512)
+    eps = hacc_benchmark_epsilon(1.0, 512)
+    a = fdbscan(jnp.asarray(pts), eps, 2)
+    b = fdbscan_densebox(jnp.asarray(pts), eps, 2)
+    core = np.asarray(a.core_mask)
+    np.testing.assert_array_equal(np.asarray(b.core_mask), core)
+    assert labels_equivalent(np.asarray(b.labels), np.asarray(a.labels), core)
+
+
+def test_eps_zero_all_noise_minpts2():
+    pts = np.random.default_rng(7).uniform(0, 1, (40, 3)).astype(np.float32)
+    res = fdbscan(jnp.asarray(pts), 1e-9, 2)
+    assert (np.asarray(res.labels) == int(NOISE)).all()
+
+
+def test_minpts_one_is_all_core_each_point_cluster():
+    pts = (np.arange(10, dtype=np.float32)[:, None] * np.array([[1, 0, 0]], np.float32))
+    res = fdbscan(jnp.asarray(pts), 0.1, 1)
+    labels = np.asarray(res.labels)
+    np.testing.assert_array_equal(labels, np.arange(10))

@@ -1,0 +1,113 @@
+"""TPU-native FDBSCAN (kernel-backed) vs oracle. Small grids — interpret
+mode pays per grid step, so tests keep ncells modest."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fdbscan_grid import (
+    bin_points,
+    fdbscan_grid,
+    grid_dims_for,
+    stencil_neighbor_map,
+)
+from repro.core.ref_numpy import core_mask_ref, dbscan_ref, labels_equivalent
+from conftest import make_clustered_points
+
+EPS = 0.22  # 5^3 grid over the unit box
+
+
+def _run(pts, min_pts, eps=EPS, capacity=128):
+    dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
+    return fdbscan_grid(jnp.asarray(pts), eps, min_pts,
+                        scene_lo=np.zeros(3, np.float32),
+                        grid_dims=dims, capacity=capacity)
+
+
+@pytest.mark.parametrize("min_pts", [2, 5, 10])
+def test_matches_oracle_clustered(min_pts):
+    pts = make_clustered_points(np.random.default_rng(3), 300)
+    res, ovf = _run(pts, min_pts)
+    assert not bool(ovf)
+    ref = dbscan_ref(pts, EPS, min_pts)
+    core = core_mask_ref(pts, EPS, min_pts)
+    np.testing.assert_array_equal(np.asarray(res.core_mask), core)
+    assert labels_equivalent(np.asarray(res.labels), ref, core)
+
+
+def test_matches_faithful_tier():
+    """Cross-validation: TPU tier and faithful tier agree on partitions."""
+    from repro.core.dbscan import fdbscan
+    pts = make_clustered_points(np.random.default_rng(4), 250)
+    res_g, _ = _run(pts, 5)
+    res_f = fdbscan(jnp.asarray(pts), EPS, 5)
+    core = np.asarray(res_f.core_mask)
+    np.testing.assert_array_equal(np.asarray(res_g.core_mask), core)
+    assert labels_equivalent(np.asarray(res_g.labels), np.asarray(res_f.labels), core)
+
+
+def test_overflow_flag():
+    pts = make_clustered_points(np.random.default_rng(5), 300)
+    _, ovf = _run(pts, 2, capacity=2)
+    assert bool(ovf)
+
+
+def test_auto_capacity_retry():
+    """Auto-tuning driver (paper §5 future work): starts at an overflowing
+    capacity and doubles until the binning fits, then matches the oracle."""
+    from repro.core.fdbscan_grid import fdbscan_grid_auto
+    pts = make_clustered_points(np.random.default_rng(8), 250)
+    res = fdbscan_grid_auto(jnp.asarray(pts), EPS, 5,
+                            scene_lo=np.zeros(3, np.float32),
+                            scene_hi=np.ones(3, np.float32), capacity=2)
+    ref = dbscan_ref(pts, EPS, 5)
+    core = core_mask_ref(pts, EPS, 5)
+    np.testing.assert_array_equal(np.asarray(res.core_mask), core)
+    assert labels_equivalent(np.asarray(res.labels), ref, core)
+
+
+def test_points_on_cell_boundaries():
+    """Points exactly on cell edges must not be double-counted or lost.
+
+    Lattice spacing 0.1 with eps=0.15: points 0.3 and 0.6 are exact f32
+    multiples of the 0.15 cell size (bin-edge cases), while no pair sits
+    exactly at distance eps (0.1, 0.1414 < eps < 0.2) — exact-at-eps pairs
+    are float-knife-edge and not contract-testable."""
+    g = (np.arange(7) * 0.1).astype(np.float32)
+    pts = np.stack(np.meshgrid(g, g, g), -1).reshape(-1, 3).astype(np.float32)
+    eps = 0.15
+    dims = grid_dims_for(np.zeros(3), np.full(3, 0.61), eps)
+    res, ovf = fdbscan_grid(jnp.asarray(pts), eps, 2,
+                            scene_lo=np.zeros(3, np.float32),
+                            grid_dims=dims, capacity=32)
+    assert not bool(ovf)
+    ref = dbscan_ref(pts, eps, 2)
+    core = core_mask_ref(pts, eps, 2)
+    np.testing.assert_array_equal(np.asarray(res.core_mask), core)
+    assert labels_equivalent(np.asarray(res.labels), ref, core)
+
+
+def test_neighbor_map_structure():
+    dims = (3, 4, 5)
+    nbr = stencil_neighbor_map(dims)
+    ncells = 3 * 4 * 5
+    assert nbr.shape == (ncells, 27)
+    # Center slot (offset 0,0,0 = index 13) is the cell itself.
+    np.testing.assert_array_equal(nbr[:, 13], np.arange(ncells))
+    # Corner cell has 2^3 = 8 in-bounds neighbors.
+    assert (nbr[0] != ncells).sum() == 8
+    # Interior cell has all 27.
+    interior = np.ravel_multi_index((1, 1, 1), dims)
+    assert (nbr[interior] != ncells).sum() == 27
+
+
+def test_bin_points_roundtrip():
+    rng = np.random.default_rng(6)
+    pts = rng.uniform(0, 1, (100, 3)).astype(np.float32)
+    dims = (4, 4, 4)
+    bins = bin_points(jnp.asarray(pts), jnp.zeros(3, jnp.float32), 0.25, dims, 32)
+    assert not bool(bins.overflowed)
+    flat = np.asarray(bins.cell_pts).reshape(-1, 3)
+    slots = np.asarray(bins.slot_of_point)
+    np.testing.assert_allclose(flat[slots], pts, rtol=0, atol=0)

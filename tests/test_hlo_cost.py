@@ -1,0 +1,145 @@
+"""HLO cost-walker unit tests: trip-count multiplication, dot FLOPs,
+collective accounting on small hand-checkable programs."""
+from __future__ import annotations
+
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_cost import HloModule, analyze_hlo
+
+
+SIMPLE = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %out = (s32[], f32[8,16]{1,0}) tuple(%i2, %y)
+    }
+
+    %cond (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i3 = s32[] get-tuple-element(%p2), index=0
+      %lim = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i3, %lim), direction=LT
+    }
+
+    ENTRY %main (x0: f32[8,16]) -> f32[8,16] {
+      %x0 = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %x0)
+      %w2 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body
+      ROOT %res = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+    }
+""")
+
+
+def test_while_trip_count_multiplies_dot_flops():
+    res = analyze_hlo(SIMPLE)
+    # one dot = 2*8*16*16 = 4096 flops, x7 trips
+    assert res["flops"] == 7 * 2 * 8 * 16 * 16
+
+
+def test_trip_count_parse():
+    mod = HloModule(SIMPLE)
+    assert mod.trip_count("cond") == 7
+
+
+COLL = textwrap.dedent("""
+    HloModule test2
+
+    ENTRY %main (x: bf16[64,32]) -> bf16[64,32] {
+      %x = bf16[64,32]{1,0} parameter(0)
+      %ag = bf16[64,128]{1,0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={1}
+      %ar = bf16[64,32]{1,0} all-reduce(%x), replica_groups=[8]<=[8], to_apply=%add
+      ROOT %out = bf16[64,32]{1,0} add(%ar, %x)
+    }
+""")
+
+
+def test_collective_bytes_true_dtype():
+    res = analyze_hlo(COLL)
+    ag = 64 * 128 * 2
+    ar = 64 * 32 * 2 * 2  # all-reduce counted 2x
+    assert res["coll"]["all-gather"] == ag
+    assert res["coll"]["all-reduce"] == ar
+    assert res["coll"]["total"] == ag + ar
+
+
+def test_nested_while():
+    nested = textwrap.dedent("""
+        HloModule nested
+
+        %inner_body (a: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+          %a = (s32[], f32[4,4]{1,0}) parameter(0)
+          %ai = s32[] get-tuple-element(%a), index=0
+          %ax = f32[4,4]{1,0} get-tuple-element(%a), index=1
+          %m = f32[4,4]{1,0} dot(%ax, %ax), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+          %c1 = s32[] constant(1)
+          %ai2 = s32[] add(%ai, %c1)
+          ROOT %at = (s32[], f32[4,4]{1,0}) tuple(%ai2, %m)
+        }
+
+        %inner_cond (b: (s32[], f32[4,4])) -> pred[] {
+          %b = (s32[], f32[4,4]{1,0}) parameter(0)
+          %bi = s32[] get-tuple-element(%b), index=0
+          %bl = s32[] constant(3)
+          ROOT %bc = pred[] compare(%bi, %bl), direction=LT
+        }
+
+        %outer_body (c: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+          %c = (s32[], f32[4,4]{1,0}) parameter(0)
+          %ci = s32[] get-tuple-element(%c), index=0
+          %cx = f32[4,4]{1,0} get-tuple-element(%c), index=1
+          %z = s32[] constant(0)
+          %ini = (s32[], f32[4,4]{1,0}) tuple(%z, %cx)
+          %iw = (s32[], f32[4,4]{1,0}) while(%ini), condition=%inner_cond, body=%inner_body
+          %cy = f32[4,4]{1,0} get-tuple-element(%iw), index=1
+          %c2 = s32[] constant(1)
+          %ci2 = s32[] add(%ci, %c2)
+          ROOT %ct = (s32[], f32[4,4]{1,0}) tuple(%ci2, %cy)
+        }
+
+        %outer_cond (d: (s32[], f32[4,4])) -> pred[] {
+          %d = (s32[], f32[4,4]{1,0}) parameter(0)
+          %di = s32[] get-tuple-element(%d), index=0
+          %dl = s32[] constant(5)
+          ROOT %dc = pred[] compare(%di, %dl), direction=LT
+        }
+
+        ENTRY %main (e: f32[4,4]) -> f32[4,4] {
+          %e = f32[4,4]{1,0} parameter(0)
+          %z2 = s32[] constant(0)
+          %ini2 = (s32[], f32[4,4]{1,0}) tuple(%z2, %e)
+          %ow = (s32[], f32[4,4]{1,0}) while(%ini2), condition=%outer_cond, body=%outer_body
+          ROOT %r = f32[4,4]{1,0} get-tuple-element(%ow), index=1
+        }
+    """)
+    res = analyze_hlo(nested)
+    # inner dot 2*4*4*4 = 128 flops x3 inner trips x5 outer trips
+    assert res["flops"] == 128 * 3 * 5
+
+
+def test_fusion_called_computation_counted():
+    fused = textwrap.dedent("""
+        HloModule fused
+
+        %fused_computation (fa: f32[8,8], fb: f32[8,8]) -> f32[8,8] {
+          %fa = f32[8,8]{1,0} parameter(0)
+          %fb = f32[8,8]{1,0} parameter(1)
+          ROOT %fd = f32[8,8]{1,0} dot(%fa, %fb), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+
+        ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+          %x = f32[8,8]{1,0} parameter(0)
+          ROOT %f = f32[8,8]{1,0} fusion(%x, %x), kind=kOutput, calls=%fused_computation
+        }
+    """)
+    res = analyze_hlo(fused)
+    assert res["flops"] == 2 * 8 * 8 * 8

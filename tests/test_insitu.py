@@ -1,0 +1,63 @@
+"""In-situ analysis (the paper's technique inside the training loop)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.insitu import (InsituAnalyzer, InsituConfig,
+                                   embedding_cluster_stats,
+                                   router_cluster_stats)
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.spec import init_params
+
+
+def _params(arch="xlstm-350m"):
+    cfg = get_config(arch).smoke()
+    return cfg, init_params(lm.model_spec(cfg), jax.random.PRNGKey(0),
+                            jnp.float32)
+
+
+def test_embedding_stats_fields_and_finiteness():
+    cfg, params = _params()
+    stats = embedding_cluster_stats(params, InsituConfig(sample_rows=128), 3)
+    assert set(stats) >= {"insitu/embed_eps", "insitu/embed_clustered_frac",
+                          "insitu/embed_num_clusters"}
+    for v in stats.values():
+        assert bool(jnp.all(jnp.isfinite(jnp.asarray(v, jnp.float32))))
+
+
+def test_detects_representation_collapse():
+    """Duplicate embedding rows (collapse) => clustered fraction jumps."""
+    cfg, params = _params()
+    icfg = InsituConfig(sample_rows=128, eps_quantile=0.005)
+    base = embedding_cluster_stats(params, icfg, 1)
+    collapsed = dict(params)
+    emb = params["embed"]
+    # collapse 80% of rows onto row 0
+    n = emb.shape[0]
+    idx = jnp.arange(n)
+    collapsed["embed"] = jnp.where((idx % 5 > 0)[:, None], emb[0][None], emb)
+    after = embedding_cluster_stats(collapsed, icfg, 1)
+    assert float(after["insitu/embed_clustered_frac"]) > \
+        float(base["insitu/embed_clustered_frac"])
+
+
+def test_router_stats_on_moe_arch():
+    cfg, params = _params("deepseek-moe-16b")
+    stats = router_cluster_stats(params, InsituConfig(), 0)
+    assert "insitu/router_collapsed_experts" in stats
+
+
+def test_router_stats_empty_for_dense_arch():
+    cfg, params = _params("granite-20b")
+    assert router_cluster_stats(params, InsituConfig(), 0) == {}
+
+
+def test_analyzer_cadence():
+    cfg, params = _params()
+    an = InsituAnalyzer(InsituConfig(cadence=5, sample_rows=64))
+    ran = [step for step in range(11) if an.maybe_run(params, step)]
+    assert ran == [0, 5, 10]
+    assert len(an.history) == 3

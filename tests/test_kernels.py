@@ -1,0 +1,126 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.pairwise import SENTINEL_LABEL
+from repro.core.fdbscan_grid import bin_points, stencil_neighbor_map, grid_dims_for
+
+
+def _pts(rng, n, d):
+    return rng.uniform(0, 1, (n, d)).astype(np.float32)
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (5, 7), (128, 128), (130, 257), (64, 300)])
+@pytest.mark.parametrize("d", [1, 3, 8, 17, 64])
+def test_pairwise_count_shapes(m, n, d):
+    rng = np.random.default_rng(m * 1000 + n + d)
+    x, y = _pts(rng, m, d), _pts(rng, n, d)
+    eps = 0.5
+    got = np.asarray(ops.eps_neighbor_counts(jnp.asarray(x), jnp.asarray(y), eps))
+    want = np.asarray(ref.pairwise_count_ref(jnp.asarray(x), jnp.asarray(y), eps * eps))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,n", [(3, 3), (128, 128), (100, 260)])
+@pytest.mark.parametrize("d", [2, 3, 16])
+def test_pairwise_min_label_shapes(m, n, d):
+    rng = np.random.default_rng(m + n * 31 + d)
+    x, y = _pts(rng, m, d), _pts(rng, n, d)
+    labels = rng.integers(0, n, n).astype(np.int32)
+    core = rng.uniform(size=n) < 0.6
+    eps = 0.4
+    got = np.asarray(ops.eps_min_label(jnp.asarray(x), jnp.asarray(y),
+                                       jnp.asarray(labels), jnp.asarray(core), eps))
+    want = np.asarray(ref.pairwise_min_label_ref(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(labels), jnp.asarray(core), eps * eps))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("tile", [(32, 32), (8, 128)])
+def test_pairwise_count_tile_shapes(tile):
+    tm, tn = tile
+    rng = np.random.default_rng(42)
+    x, y = _pts(rng, 40, 3), _pts(rng, 70, 3)
+    got = np.asarray(ops.eps_neighbor_counts(jnp.asarray(x), jnp.asarray(y), 0.3,
+                                             tm=tm, tn=tn))
+    want = np.asarray(ref.pairwise_count_ref(jnp.asarray(x), jnp.asarray(y), 0.09))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(m=st.integers(1, 80), n=st.integers(1, 80), d=st.integers(1, 9),
+       eps=st.floats(0.01, 1.5))
+@settings(max_examples=20, deadline=None)
+def test_property_pairwise_count(m, n, d, eps):
+    rng = np.random.default_rng(m * 97 + n * 13 + d)
+    x, y = _pts(rng, m, d), _pts(rng, n, d)
+    got = np.asarray(ops.eps_neighbor_counts(jnp.asarray(x), jnp.asarray(y), eps,
+                                             tm=32, tn=32))
+    d2 = ((x[:, None] - y[None]) ** 2).sum(-1)
+    want = (d2 <= eps * eps).sum(1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_count_self_includes_self():
+    x = np.zeros((4, 3), np.float32)
+    got = np.asarray(ops.eps_neighbor_counts(jnp.asarray(x), jnp.asarray(x), 0.1))
+    np.testing.assert_array_equal(got, [4, 4, 4, 4])
+
+
+@pytest.mark.parametrize("capacity", [4, 16])
+def test_stencil_count_matches_ref(capacity):
+    rng = np.random.default_rng(0)
+    pts = _pts(rng, 150, 3)
+    eps = 0.2
+    dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
+    bins = bin_points(jnp.asarray(pts), jnp.zeros(3, jnp.float32), eps, dims, capacity)
+    nbr = jnp.asarray(stencil_neighbor_map(dims))
+    got = np.asarray(ops.cell_stencil_counts(bins.cell_pts, nbr, eps))
+    want = np.asarray(ref.stencil_count_ref(bins.cell_pts, nbr, eps * eps))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stencil_min_label_matches_ref():
+    rng = np.random.default_rng(1)
+    pts = _pts(rng, 120, 3)
+    eps = 0.25
+    cap = 16
+    dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
+    bins = bin_points(jnp.asarray(pts), jnp.zeros(3, jnp.float32), eps, dims, cap)
+    ncells = bins.num_cells
+    nbr = jnp.asarray(stencil_neighbor_map(dims))
+    lab = jnp.asarray(rng.integers(0, 120, (ncells + 1, cap)), jnp.int32)
+    core = jnp.asarray(rng.uniform(size=(ncells + 1, cap)) < 0.7)
+    got = np.asarray(ops.cell_stencil_min_label(bins.cell_pts, lab, core, nbr, eps))
+    want = np.asarray(ref.stencil_min_label_ref(bins.cell_pts, lab, core, nbr, eps * eps))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stencil_counts_equal_bruteforce_per_point():
+    """End-to-end: counts read back per point equal brute-force ε-counts."""
+    rng = np.random.default_rng(5)
+    pts = _pts(rng, 200, 3)
+    eps = 0.15
+    cap = 64
+    dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
+    bins = bin_points(jnp.asarray(pts), jnp.zeros(3, jnp.float32), eps, dims, cap)
+    assert not bool(bins.overflowed)
+    nbr = jnp.asarray(stencil_neighbor_map(dims))
+    counts_cells = np.asarray(ops.cell_stencil_counts(bins.cell_pts, nbr, eps))
+    flat = np.concatenate([counts_cells.reshape(-1), np.zeros(cap, np.int32)])
+    got = flat[np.asarray(bins.slot_of_point)]
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    want = (d2 <= eps * eps).sum(1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_min_label_none_is_sentinel():
+    x = np.zeros((2, 3), np.float32)
+    y = np.ones((3, 3), np.float32)  # all out of eps range
+    got = np.asarray(ops.eps_min_label(jnp.asarray(x), jnp.asarray(y),
+                                       jnp.zeros(3, jnp.int32), jnp.ones(3, bool), 0.1))
+    assert (got == SENTINEL_LABEL).all()

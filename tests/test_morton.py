@@ -1,0 +1,104 @@
+"""Morton code unit + property tests (paper §4.2.2, Table 1)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import morton
+
+
+def _ref_expand3(v: int) -> int:
+    out = 0
+    for bit in range(21):
+        out |= ((v >> bit) & 1) << (3 * bit)
+    return out
+
+
+def _ref_morton3(x: int, y: int, z: int, bits: int) -> int:
+    m = (1 << bits) - 1
+    return (_ref_expand3(x & m) << 2) | (_ref_expand3(y & m) << 1) | _ref_expand3(z & m)
+
+
+def test_morton32_matches_bitwise_reference():
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 1024, (256, 3))
+    unit = (q.astype(np.float64) + 0.5) / 1024.0
+    got = np.asarray(morton.morton32(jnp.asarray(unit, jnp.float32)))
+    want = np.array([_ref_morton3(*row, bits=10) for row in q], np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_morton64_matches_bitwise_reference():
+    rng = np.random.default_rng(1)
+    q = rng.integers(0, 1 << 21, (256, 3))
+    unit = (q.astype(np.float64) + 0.5) / float(1 << 21)
+    hi, lo = morton.morton64(jnp.asarray(unit, jnp.float32))
+    got = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo).astype(np.uint64)
+    # float32 quantization: recompute the quantized coordinate the kernel saw.
+    q32 = np.floor(np.asarray(unit, np.float32) * float(1 << 21)).astype(np.int64)
+    q32 = np.clip(q32, 0, (1 << 21) - 1)
+    want = np.array([_ref_morton3(*row, bits=21) for row in q32], np.uint64)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(st.tuples(st.floats(0, 0.999999), st.floats(0, 0.999999), st.floats(0, 0.999999)),
+                min_size=2, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_morton64_order_refines_morton32(coords):
+    """Property: the 64-bit code order is a refinement of the 32-bit order —
+    if code32(a) < code32(b), then code64(a) < code64(b)."""
+    pts = jnp.asarray(np.array(coords, np.float32))
+    c32 = np.asarray(morton.morton32(pts)).astype(np.uint64)
+    hi, lo = morton.morton64(pts)
+    c64 = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo).astype(np.uint64)
+    for i in range(len(coords)):
+        for j in range(len(coords)):
+            if c32[i] < c32[j]:
+                assert c64[i] < c64[j]
+
+
+def test_table1_collision_phenomenon(clustered_points):
+    """Paper Table 1: clustered data collides massively at 32 bits, ~never at
+    64 bits."""
+    pts = jnp.asarray(clustered_points)
+    lo = pts.min(0) - 1e-5
+    hi = pts.max(0) + 1e-5
+    unit = morton.normalize_points(pts, lo, hi)
+
+    c32 = np.asarray(morton.morton32(unit))
+    h, l = morton.morton64(unit)
+    c64 = (np.asarray(h).astype(np.uint64) << np.uint64(32)) | np.asarray(l).astype(np.uint64)
+
+    def dup_count(codes):
+        _, counts = np.unique(codes, return_counts=True)
+        return int(counts[counts > 1].sum())
+
+    assert dup_count(c64) <= dup_count(c32)
+
+
+def test_common_prefix_length_tie_break():
+    codes = jnp.asarray([5, 5, 5, 9], jnp.uint32)
+    i = jnp.asarray([0, 0, 0])
+    j = jnp.asarray([1, 2, 3])
+    d = morton.common_prefix_length32(codes, i, j)
+    # Equal codes: 32 + clz(i ^ j) > 32; distinct codes: < 32.
+    assert int(d[0]) > 32 and int(d[1]) > 32 and int(d[2]) < 32
+    # Closer indices share longer prefixes.
+    assert int(d[0]) > int(d[1])
+
+
+def test_common_prefix_out_of_range():
+    codes = jnp.asarray([1, 2, 3], jnp.uint32)
+    assert int(morton.common_prefix_length32(codes, jnp.int32(0), jnp.int32(-1))) == -1
+    assert int(morton.common_prefix_length32(codes, jnp.int32(0), jnp.int32(3))) == -1
+
+
+def test_sort64_is_lexicographic():
+    rng = np.random.default_rng(3)
+    hi = jnp.asarray(rng.integers(0, 4, 128), jnp.uint32)
+    lo = jnp.asarray(rng.integers(0, 1 << 30, 128), jnp.uint32)
+    perm = np.asarray(morton.sort_by_morton64(hi, lo))
+    keys = (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo).astype(np.uint64)
+    np.testing.assert_array_equal(keys[perm], np.sort(keys))

@@ -1,0 +1,185 @@
+"""kNN, EMST, MLS interpolation, ray casting — the rest of ArborX's §3.2
+functionality surface."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bvh import build_bvh, build_bvh_objects
+from repro.core.emst import emst
+from repro.core.interpolate import mls_interpolate
+from repro.core.knn import knn
+from repro.core.raycast import raycast
+
+
+def _bvh(pts):
+    lo, hi = pts.min(0) - 1e-4, pts.max(0) + 1e-4
+    return build_bvh(jnp.asarray(pts), jnp.asarray(lo), jnp.asarray(hi))
+
+
+# --- kNN ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,q", [(16, 1, 8), (128, 4, 32), (256, 15, 16)])
+def test_knn_matches_bruteforce(n, k, q):
+    rng = np.random.default_rng(n + k)
+    pts = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    queries = rng.uniform(0, 1, (q, 3)).astype(np.float32)
+    res = knn(_bvh(pts), jnp.asarray(pts), jnp.asarray(queries), k)
+    d = np.sqrt(((queries[:, None] - pts[None]) ** 2).sum(-1))
+    want = np.sort(d, axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(res.distances), want, atol=1e-5)
+
+
+def test_knn_self_query_returns_self_first():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1, (64, 3)).astype(np.float32)
+    res = knn(_bvh(pts), jnp.asarray(pts), jnp.asarray(pts), 3)
+    np.testing.assert_array_equal(np.asarray(res.indices[:, 0]), np.arange(64))
+    np.testing.assert_allclose(np.asarray(res.distances[:, 0]), 0, atol=1e-6)
+
+
+@given(n=st.integers(4, 100), k=st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_knn_property(n, k):
+    k = min(k, n)
+    rng = np.random.default_rng(n * 31 + k)
+    pts = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    queries = rng.uniform(0, 1, (5, 3)).astype(np.float32)
+    res = knn(_bvh(pts), jnp.asarray(pts), jnp.asarray(queries), k)
+    d = np.sqrt(((queries[:, None] - pts[None]) ** 2).sum(-1))
+    want = np.sort(d, axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(res.distances), want, atol=1e-5)
+
+
+# --- EMST ---------------------------------------------------------------------
+
+def _prim_weight(pts):
+    n = len(pts)
+    d = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1))
+    in_tree = np.zeros(n, bool)
+    in_tree[0] = True
+    best = d[0].copy()
+    total = 0.0
+    for _ in range(n - 1):
+        best[in_tree] = np.inf
+        j = np.argmin(best)
+        total += best[j]
+        in_tree[j] = True
+        best = np.minimum(best, d[j])
+    return total
+
+
+@pytest.mark.parametrize("n", [8, 64, 300])
+def test_emst_weight_matches_prim(n):
+    rng = np.random.default_rng(n)
+    pts = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    res = emst(jnp.asarray(pts))
+    edges = np.asarray(res.edges)
+    assert (edges >= 0).all()
+    assert float(res.total_weight) == pytest.approx(_prim_weight(pts), rel=1e-5)
+
+
+def test_emst_is_spanning_tree():
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(0, 1, (100, 3)).astype(np.float32)
+    res = emst(jnp.asarray(pts))
+    edges = np.asarray(res.edges)
+    # n-1 edges, connected, acyclic => union-find sanity
+    parent = list(range(100))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in edges:
+        ra, rb = find(a), find(b)
+        assert ra != rb, "cycle in EMST"
+        parent[ra] = rb
+    assert len({find(i) for i in range(100)}) == 1, "not spanning"
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_emst_property(seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, (40, 3)).astype(np.float32)
+    res = emst(jnp.asarray(pts))
+    assert float(res.total_weight) == pytest.approx(_prim_weight(pts), rel=1e-5)
+
+
+# --- MLS interpolation ---------------------------------------------------------
+
+def test_mls_reproduces_linear_fields():
+    """Degree-1 MLS must reproduce linear functions exactly (consistency)."""
+    rng = np.random.default_rng(3)
+    src = rng.uniform(0, 1, (400, 3)).astype(np.float32)
+    tgt = rng.uniform(0.1, 0.9, (50, 3)).astype(np.float32)
+    f = lambda p: 2.0 * p[:, 0] - 3.0 * p[:, 1] + 0.5 * p[:, 2] + 1.0
+    got = np.asarray(mls_interpolate(jnp.asarray(src), jnp.asarray(f(src)),
+                                     jnp.asarray(tgt), k=10))
+    np.testing.assert_allclose(got, f(tgt), rtol=1e-3, atol=1e-3)
+
+
+def test_mls_approximates_smooth_field():
+    rng = np.random.default_rng(4)
+    src = rng.uniform(0, 1, (2000, 3)).astype(np.float32)
+    tgt = rng.uniform(0.2, 0.8, (40, 3)).astype(np.float32)
+    f = lambda p: np.sin(2 * p[:, 0]) * np.cos(p[:, 1]) + p[:, 2] ** 2
+    got = np.asarray(mls_interpolate(jnp.asarray(src), jnp.asarray(f(src).astype(np.float32)),
+                                     jnp.asarray(tgt), k=12))
+    err = np.abs(got - f(tgt))
+    assert err.max() < 0.05, err.max()
+
+
+# --- ray casting ----------------------------------------------------------------
+
+def test_raycast_nearest_box():
+    # three unit-ish boxes along +x; ray from origin must hit the nearest
+    lo = np.array([[1, -.1, -.1], [3, -.1, -.1], [5, -.1, -.1]], np.float32)
+    hi = lo + np.float32(0.5)
+    scene_lo, scene_hi = lo.min(0) - 1, hi.max(0) + 1
+    bvh = build_bvh_objects(jnp.asarray(lo), jnp.asarray(hi),
+                            jnp.asarray(scene_lo), jnp.asarray(scene_hi))
+    origins = np.zeros((2, 3), np.float32)
+    dirs = np.array([[1, 0, 0], [-1, 0, 0]], np.float32)
+    hits = raycast(bvh, jnp.asarray(origins), jnp.asarray(dirs))
+    assert int(hits.index[0]) == 0 and float(hits.t[0]) == pytest.approx(1.0)
+    assert int(hits.index[1]) == -1  # miss
+
+
+def test_raycast_matches_bruteforce_random():
+    rng = np.random.default_rng(5)
+    n = 60
+    lo = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0.01, 0.08, (n, 3)).astype(np.float32)
+    bvh = build_bvh_objects(jnp.asarray(lo), jnp.asarray(hi),
+                            jnp.asarray(lo.min(0) - .1), jnp.asarray(hi.max(0) + .1))
+    origins = rng.uniform(-0.5, 0, (20, 3)).astype(np.float32)
+    dirs = rng.standard_normal((20, 3)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    hits = raycast(bvh, jnp.asarray(origins), jnp.asarray(dirs))
+
+    def brute(o, d):
+        inv = 1.0 / np.where(np.abs(d) < 1e-12, 1e-12, d)
+        t0 = (lo - o) * inv
+        t1 = (hi - o) * inv
+        tmin = np.minimum(t0, t1).max(1)
+        tmax = np.maximum(t0, t1).min(1)
+        ok = tmax >= np.maximum(tmin, 0)
+        te = np.where(ok, np.maximum(tmin, 0), np.inf)
+        j = te.argmin()
+        return (j, te[j]) if np.isfinite(te[j]) else (-1, np.inf)
+
+    import pytest as _pt
+    for r in range(20):
+        j, t = brute(origins[r], dirs[r])
+        assert int(hits.index[r]) == j, r
+        if j >= 0:
+            assert float(hits.t[r]) == _pt.approx(t, rel=1e-4)
+
+
+import pytest  # noqa: E402  (used in raycast tests above)

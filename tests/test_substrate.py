@@ -1,0 +1,186 @@
+"""Substrate tests: optimizer, checkpoint store, supervisor fault tolerance,
+data pipeline determinism, gradient compression."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.optim import adamw
+from repro.runtime.supervisor import Supervisor, SupervisorConfig, StragglerWatchdog
+
+
+# --- optimizer ---------------------------------------------------------------
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = adamw.OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                          weight_decay=0.0, moment_dtype="float32")
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    opt = adamw.init_opt_state(cfg, params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw.apply_updates(cfg, params, g, opt)
+    assert float(loss(params)) < 0.1
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert lrs[4] == pytest.approx(0.1, rel=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_int8_compression_error_feedback_converges():
+    """Error feedback: quantization error is carried, not lost — the SUM of
+    dequantized grads over steps tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(0, 1e-3, (256,)), jnp.float32)
+    err = {"g": jnp.zeros((256,), jnp.float32)}
+    total = jnp.zeros((256,))
+    for _ in range(64):
+        deq, err = adamw.compress_with_feedback({"g": g_true}, err)
+        total = total + deq["g"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g_true * 64),
+                               atol=2e-4)
+
+
+def test_compress_roundtrip_bounded_error():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    q, s = adamw.compress_int8(g)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(adamw.decompress_int8(q, s)) - np.asarray(g))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_moment_dtype_bf16():
+    cfg = adamw.OptConfig(moment_dtype="bfloat16")
+    opt = adamw.init_opt_state(cfg, {"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert opt.m["w"].dtype == jnp.bfloat16
+
+
+# --- checkpoint store ---------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(3.5)}}
+    store.save(7, tree)
+    out, step = store.restore(jax.eval_shape(lambda: tree))
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert float(out["b"]["c"]) == 3.5
+
+
+def test_checkpoint_async_and_prune(tmp_path):
+    store = CheckpointStore(tmp_path)
+    for s in (1, 2, 3, 4):
+        store.save_async(s, {"x": jnp.full((8,), s)})
+    store.wait()
+    store.prune(keep=2)
+    assert store.steps() == [3, 4]
+
+
+def test_torn_checkpoint_ignored(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, {"x": jnp.zeros(3)})
+    torn = tmp_path / "step_00000002"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{}")  # no COMMIT
+    assert store.latest_step() == 1
+
+
+# --- supervisor fault tolerance ----------------------------------------------
+
+def test_supervisor_restarts_after_injected_failure(tmp_path):
+    store = CheckpointStore(tmp_path)
+    cfg = SupervisorConfig(total_steps=20, checkpoint_every=5, max_restarts=3)
+    sup = Supervisor(cfg, store)
+    failed = {"done": False}
+
+    def init_state():
+        return {"w": jnp.float32(0.0), "step_sum": jnp.float32(0.0)}
+
+    def step_fn(state, step):
+        return ({"w": state["w"] + 1.0,
+                 "step_sum": state["step_sum"] + step}, {"loss": state["w"]})
+
+    def fault_hook(step):
+        if step == 12 and not failed["done"]:
+            failed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    state = sup.run(init_state_fn=init_state, step_fn=step_fn,
+                    fault_hook=fault_hook)
+    assert sup.restarts == 1
+    # restart resumed from step 10 (last checkpoint), so w == 20 exactly
+    assert float(state["w"]) == 20.0
+    assert store.latest_step() == 20
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    store = CheckpointStore(tmp_path)
+    sup = Supervisor(SupervisorConfig(total_steps=5, checkpoint_every=100,
+                                      max_restarts=2), store)
+
+    def step_fn(state, step):
+        raise RuntimeError("always fails")
+
+    with pytest.raises(RuntimeError):
+        sup.run(init_state_fn=lambda: {"w": jnp.float32(0)}, step_fn=step_fn)
+    assert sup.restarts == 3
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(threshold=2.0, alpha=0.5)
+    assert not w.observe(0, 1.0)
+    assert not w.observe(1, 1.1)
+    assert w.observe(2, 5.0)        # straggler
+    assert w.flagged == [2]
+    assert not w.observe(3, 1.0)    # ewma not poisoned by the outlier
+
+
+# --- data pipeline -------------------------------------------------------------
+
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab=128, seq_len=32, global_batch=8, seed=3)
+    ds = SyntheticTokens(cfg)
+    b1 = ds.batch_at(5)
+    b2 = ds.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = ds.batch_at(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=8, seed=0)
+    ds = SyntheticTokens(cfg)
+    full = np.asarray(ds.batch_at(2)["tokens"])
+    parts = [np.asarray(ds.batch_at(2, host_index=h, host_count=4)["tokens"])
+             for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_labels_shift_by_one():
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=2, seed=1)
+    ds = SyntheticTokens(cfg)
+    b = ds.batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))

@@ -1,0 +1,65 @@
+"""Union-find / connected-components tests (paper §4.3, deviation 3)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import union_find
+
+
+def _ref_components(n, edges):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in edges:
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(i) for i in range(n)])
+
+
+@given(st.integers(1, 60), st.lists(st.tuples(st.integers(0, 59), st.integers(0, 59)), max_size=120))
+@settings(max_examples=60, deadline=None)
+def test_connected_components_matches_reference(n, raw_edges):
+    edges = [(u % n, v % n) for u, v in raw_edges]
+    if edges:
+        u = jnp.asarray([e[0] for e in edges], jnp.int32)
+        v = jnp.asarray([e[1] for e in edges], jnp.int32)
+    else:
+        u = v = jnp.zeros((1,), jnp.int32)
+        edges = [(0, 0)]
+    got = np.asarray(union_find.connected_components(n, u, v))
+    want = _ref_components(n, edges)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_compress_idempotent():
+    p = jnp.asarray([0, 0, 1, 2, 3, 5, 5], jnp.int32)
+    c = union_find.compress(p)
+    np.testing.assert_array_equal(np.asarray(c), [0, 0, 0, 0, 0, 5, 5])
+    np.testing.assert_array_equal(np.asarray(union_find.compress(c)), np.asarray(c))
+
+
+def test_hook_min_is_deterministic_under_duplicate_edges():
+    p = jnp.arange(6, dtype=jnp.int32)
+    u = jnp.asarray([0, 0, 5, 5], jnp.int32)
+    v = jnp.asarray([5, 5, 0, 0], jnp.int32)
+    m = jnp.ones(4, bool)
+    p1 = union_find.hook_min(p, u, v, m)
+    p2 = union_find.hook_min(p, u, v, m)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    assert int(p1[5]) == 0
+
+
+def test_labels_are_min_index_of_component():
+    # chain 3-4-5 and pair (0,2); 1 isolated
+    u = jnp.asarray([3, 4, 0], jnp.int32)
+    v = jnp.asarray([4, 5, 2], jnp.int32)
+    got = np.asarray(union_find.connected_components(6, u, v))
+    np.testing.assert_array_equal(got, [0, 1, 0, 3, 3, 3])
