@@ -1,0 +1,87 @@
+"""Halo-pipeline benchmark: labels -> catalog throughput (new workload).
+
+Times the catalog stage of the in-situ pipeline — canonicalization +
+segmented reductions + mass cut — on synthetic power-law halo populations
+(labels generated directly so the timing isolates the NEW subsystem, not
+the DBSCAN ladder benchmarked in fig4). Sizes span 1e5–1e7 particles
+(``--fast``: 1e4).
+
+Emits the usual CSV lines plus a ``BENCH_halos.json`` artifact so the perf
+trajectory of this workload is tracked from the PR that introduced it.
+
+  PYTHONPATH=src python -m benchmarks.halo_pipeline [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.halos.catalog import halo_catalog
+
+CAPACITY = 4096
+
+
+def synthetic_labels(rng: np.random.Generator, n: int,
+                     n_halos: int, noise_frac: float = 0.2) -> np.ndarray:
+    """Power-law halo mass function: sizes ~ Pareto, labels = root ids
+    (min member index per halo, matching the DBSCAN convention)."""
+    w = rng.pareto(1.3, n_halos) + 1
+    sizes = rng.multinomial(int(n * (1 - noise_frac)), w / w.sum())
+    halo_of = np.repeat(np.arange(n_halos), sizes)        # (m,) clustered rows
+    positions = rng.permutation(n)[:len(halo_of)]          # original indices
+    roots = np.full(n_halos, n, np.int64)
+    np.minimum.at(roots, halo_of, positions)               # root = min member
+    labels = np.full(n, -1, np.int64)
+    labels[positions] = roots[halo_of]
+    return labels.astype(np.int32)
+
+
+def bench_catalog(n: int, results: dict, *, pallas_limit: int) -> None:
+    rng = np.random.default_rng(n)
+    # keep the population inside CAPACITY so the timed run never truncates
+    n_halos = min(max(8, n // 2000), CAPACITY)
+    labels = jnp.asarray(synthetic_labels(rng, n, n_halos))
+    pts = jnp.asarray(rng.uniform(0, 1, (n, 3)).astype(np.float32))
+    vel = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+
+    backends = ["jax"]
+    # Pallas interpret mode (CPU) is python-speed; only time it natively or
+    # at small n so the CSV stays honest about what ran.
+    if jax.default_backend() == "tpu" or n <= pallas_limit:
+        backends.append("pallas")
+    for backend in backends:
+        def run():
+            return halo_catalog(pts, vel, labels, capacity=CAPACITY,
+                                min_count=10, backend=backend)
+
+        # warm (compiles) + capture the overflow flag, then time warmup-free
+        overflow = bool(jax.block_until_ready(run()).overflow)
+        t = timeit(run, warmup=0)
+        name = f"halos/catalog_{backend}_n{n}"
+        emit(name, t, derived=f"{n / max(t, 1e-12) / 1e6:.2f}Mp/s")
+        results[name] = {"seconds": t, "n": n, "backend": backend,
+                         "particles_per_s": n / max(t, 1e-12),
+                         "overflow": overflow}
+
+
+def main(fast: bool = False, out_path: str = "BENCH_halos.json") -> None:
+    sizes = [10 ** 4] if fast else [10 ** 5, 10 ** 6, 10 ** 7]
+    pallas_limit = 10 ** 4 if fast else 10 ** 5
+    results: dict = {}
+    for n in sizes:
+        bench_catalog(n, results, pallas_limit=pallas_limit)
+    pathlib.Path(out_path).write_text(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=args.fast)

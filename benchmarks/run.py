@@ -17,13 +17,15 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import fig1_insitu, fig4_timeline, kernels_micro, table1_morton
+    from benchmarks import (fig1_insitu, fig4_timeline, halo_pipeline,
+                            kernels_micro, table1_morton)
 
     suites = {
         "table1": lambda: table1_morton.main(n=(1 << 15) if args.fast else (1 << 18)),
         "fig4": lambda: fig4_timeline.ladder(n=512 if args.fast else 2048),
         "fig1": fig1_insitu.main,
         "kernels": kernels_micro.main,
+        "halos": lambda: halo_pipeline.main(fast=args.fast),
     }
     print("name,us_per_call,derived")
     failures = []

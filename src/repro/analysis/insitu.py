@@ -11,9 +11,14 @@ leaving the device:
 * embedding-space clustering — sampled token-embedding rows; detects
   representation collapse / near-duplicate embeddings (minPts=2 ≡ FOF);
 * MoE router clustering — expert centroids in router space; detects expert
-  collapse (experts whose router columns cluster within ε).
+  collapse (experts whose router columns cluster within ε);
+* simulation halo stats — for particle states (positions + velocities), the
+  full HACC deliverable: labels -> halo CATALOG (``repro.halos``) with
+  per-halo masses, centers and velocity dispersions, every analysis step.
 
-Both consume the SAME clustering core benchmarked in benchmarks/fig4.
+All consume the SAME clustering core benchmarked in benchmarks/fig4; the
+cluster accounting itself now runs through the halo-catalog subsystem
+(halo-stats mode) instead of ad-hoc label arithmetic.
 """
 from __future__ import annotations
 
@@ -25,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dbscan import fdbscan
-from repro.core import union_find
+from repro.data.pipeline import hacc_benchmark_epsilon
+from repro.halos.catalog import halo_catalog
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +41,15 @@ class InsituConfig:
     eps_quantile: float = 0.01     # ε from the pairwise-distance quantile
     min_pts: int = 2               # FOF
     project_dim: int = 3           # random projection for the geometric core
+    halo_capacity: int = 256       # catalog slots for simulation halo stats
+    halo_min_count: int = 10       # HACC-style small-halo mass cut
+    mode: str = "training"         # "training" (embed/router) | "simulation"
+    #   "simulation": state is {"positions", "velocities"[, "eps"]} and the
+    #   analyzer runs the full halo-stats pipeline instead.
+
+    def __post_init__(self):
+        if self.mode not in ("training", "simulation"):
+            raise ValueError(f"unknown insitu mode {self.mode!r}")
 
 
 def _sample_rows(key, table: jax.Array, n: int) -> jax.Array:
@@ -63,22 +78,51 @@ def _eps_from_quantile(pts: jax.Array, q: float) -> jax.Array:
 def embedding_cluster_stats(params: dict, cfg: InsituConfig,
                             step: int) -> dict[str, jax.Array]:
     """Cluster sampled embedding rows; many clustered rows => collapsing
-    representations (the 'halo finding' of the representation space)."""
+    representations (the 'halo finding' of the representation space).
+
+    Halo-stats mode: cluster accounting goes through the catalog subsystem.
+    ``embed_num_clusters`` counts clusters that RETAIN >= min_pts members
+    after border assignment (borders join only their min-root neighbor, so
+    a cluster can rarely end up smaller than min_pts and is then excluded —
+    a slightly stricter count than raw DBSCAN roots), and the biggest
+    'halo' is reported as the sharpest collapse indicator."""
     key = jax.random.PRNGKey(step)
     rows = _sample_rows(key, params["embed"], cfg.sample_rows)
     pts = _project(jax.random.fold_in(key, 1), rows, cfg.project_dim)
     eps = _eps_from_quantile(pts, cfg.eps_quantile)
     res = fdbscan(pts, eps, cfg.min_pts)
-    n_clusters = union_find.compress(
-        jnp.where(res.labels >= 0, res.labels, jnp.arange(res.labels.shape[0])))
+    n = res.labels.shape[0]
+    cat = halo_catalog(pts, jnp.zeros_like(pts), res.labels,
+                       capacity=n, min_count=cfg.min_pts)
     n_clustered = jnp.sum(res.labels >= 0)
-    num_clusters = jnp.sum((res.labels == jnp.arange(res.labels.shape[0]))
-                           & (res.labels >= 0))
     return {
         "insitu/embed_eps": eps,
-        "insitu/embed_clustered_frac": n_clustered / res.labels.shape[0],
-        "insitu/embed_num_clusters": num_clusters,
+        "insitu/embed_clustered_frac": n_clustered / n,
+        "insitu/embed_num_clusters": cat.num_halos,
+        "insitu/embed_largest_cluster": jnp.max(cat.count),
         "insitu/embed_union_rounds": res.num_rounds,
+    }
+
+
+def simulation_halo_stats(positions: jax.Array, velocities: jax.Array,
+                          cfg: InsituConfig, eps,
+                          step: int = 0) -> dict[str, jax.Array]:
+    """The actual HACC in-situ step: particle phase space -> halo catalog
+    summary, all on-device (labels via FDBSCAN, catalog via repro.halos)."""
+    res = fdbscan(positions, eps, cfg.min_pts)
+    cat = halo_catalog(positions, velocities, res.labels,
+                       capacity=cfg.halo_capacity,
+                       min_count=cfg.halo_min_count)
+    valid = cat.count > 0
+    nh = jnp.maximum(cat.num_halos, 1)
+    return {
+        "insitu/halo_num": cat.num_halos,
+        "insitu/halo_overflow": cat.overflow.astype(jnp.int32),
+        "insitu/halo_largest": jnp.max(cat.count),
+        "insitu/halo_mass_frac": jnp.sum(cat.count) / positions.shape[0],
+        "insitu/halo_vdisp_mean": jnp.sum(jnp.where(valid, cat.vdisp, 0.0)) / nh,
+        "insitu/halo_rmax_max": jnp.max(cat.rmax),
+        "insitu/halo_union_rounds": res.num_rounds,
     }
 
 
@@ -120,8 +164,16 @@ class InsituAnalyzer:
     def maybe_run(self, params: dict, step: int) -> dict[str, Any]:
         if step % self.cfg.cadence != 0:
             return {}
-        stats = dict(embedding_cluster_stats(params, self.cfg, step))
-        stats.update(router_cluster_stats(params, self.cfg, step))
+        if self.cfg.mode == "simulation":
+            # Simulation state (the HACC workload): full halo-stats mode.
+            eps = params.get("eps", hacc_benchmark_epsilon(
+                1.0, int(params["positions"].shape[0])))
+            stats = dict(simulation_halo_stats(
+                params["positions"], params["velocities"], self.cfg, eps,
+                step))
+        else:
+            stats = dict(embedding_cluster_stats(params, self.cfg, step))
+            stats.update(router_cluster_stats(params, self.cfg, step))
         host = {k: float(np.asarray(v)) for k, v in stats.items()}
         self.history.append((step, host))
         return host

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bvh import build_bvh
-from repro.core.geometry import aabb_of_points
+from repro.core.geometry import scene_bounds
 from repro.core.traversal import pair_traverse_sphere
 
 __all__ = ["pair_count_histogram", "two_point_correlation"]
@@ -27,9 +27,8 @@ def pair_count_histogram(points: jax.Array, r_max, n_bins: int = 16) -> jax.Arra
     bins over (0, r_max]. Fused into the pair traversal — no pair list is
     ever materialized (the paper's callback principle)."""
     n = points.shape[0]
-    box = aabb_of_points(points)
-    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
-    bvh = build_bvh(points, box.lo - pad, box.hi + pad)
+    lo, hi = scene_bounds(points)
+    bvh = build_bvh(points, lo, hi)
     r_max_f = jnp.asarray(r_max, points.dtype)
     r2_max = r_max_f ** 2
 

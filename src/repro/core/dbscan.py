@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from repro.core import union_find
 from repro.core.bvh import Bvh, build_bvh, build_bvh_objects
 from repro.core.cell_grid import CellGrid, build_cell_grid, cell_box
-from repro.core.geometry import aabb_of_points, point_aabb_dist2
+from repro.core.geometry import scene_bounds as _scene
 from repro.core.traversal import (
     pair_traverse_sphere,
     traverse_sphere_stack,
@@ -63,13 +63,6 @@ class DbscanResult(NamedTuple):
     labels: jax.Array       # (n,) int32; cluster root or -1 (noise)
     core_mask: jax.Array    # (n,) bool
     num_rounds: jax.Array   # () int32 — union fixpoint rounds taken
-
-
-def _scene(points):
-    box = aabb_of_points(points)
-    # Pad degenerate extents so Morton normalization is well-defined.
-    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
-    return box.lo - pad, box.hi + pad
 
 
 # ---------------------------------------------------------------------------

@@ -188,9 +188,12 @@ def _dbscan_sharded(points, eps, min_pts, halo_cap, axis, mesh_ref, max_rounds):
         return (final[None], core[None], rounds[None], ovf[None])
 
     spec_in = P(axis, None)
+    # check_rep=False: the body contains while_loops (union fixpoint, local
+    # CC), for which shard_map has no replication rule on some JAX versions.
     labels, core, rounds, ovf = shard_map(
         local_fn, mesh=mesh, in_specs=(spec_in,),
         out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        check_rep=False,
     )(points.reshape(n_shards, -1, points.shape[-1]))
     return (labels.reshape(-1), core.reshape(-1), jnp.max(rounds),
             jnp.any(ovf))

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import union_find
 from repro.core.bvh import Bvh, SENTINEL, build_bvh
-from repro.core.geometry import aabb_of_points, point_aabb_dist2
+from repro.core.geometry import scene_bounds, point_aabb_dist2
 
 __all__ = ["EmstResult", "emst"]
 
@@ -124,9 +124,8 @@ def _nearest_other_component(bvh: Bvh, points: jax.Array, comp: jax.Array):
 def emst(points: jax.Array) -> EmstResult:
     """Euclidean MST over (n, d) points via BVH-accelerated Borůvka."""
     n = points.shape[0]
-    box = aabb_of_points(points)
-    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
-    bvh = build_bvh(points, box.lo - pad, box.hi + pad)
+    lo, hi = scene_bounds(points)
+    bvh = build_bvh(points, lo, hi)
 
     # buffers sized n: slot n-1 is a write-trash slot for non-kept lanes
     # (dummy writes must never alias a real slot — scatter order is undefined)

@@ -6,7 +6,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Aabb", "aabb_of_points", "aabb_union", "point_aabb_dist2", "aabb_aabb_dist2"]
+__all__ = ["Aabb", "aabb_of_points", "aabb_union", "point_aabb_dist2",
+           "aabb_aabb_dist2", "scene_bounds"]
 
 
 class Aabb(NamedTuple):
@@ -16,6 +17,14 @@ class Aabb(NamedTuple):
 
 def aabb_of_points(points: jax.Array) -> Aabb:
     return Aabb(points.min(axis=0), points.max(axis=0))
+
+
+def scene_bounds(points: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scene AABB padded so degenerate extents keep Morton normalization
+    well-defined (the bounds every BVH build in this repo wants)."""
+    box = aabb_of_points(points)
+    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
+    return box.lo - pad, box.hi + pad
 
 
 def aabb_union(a: Aabb, b: Aabb) -> Aabb:

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bvh import build_bvh
-from repro.core.geometry import aabb_of_points
+from repro.core.geometry import scene_bounds
 from repro.core.knn import knn
 
 __all__ = ["mls_interpolate", "wendland_c2"]
@@ -34,9 +34,8 @@ def mls_interpolate(source_points: jax.Array, source_values: jax.Array,
                     targets: jax.Array, k: int = 8) -> jax.Array:
     """Interpolate scalar source_values (n,) onto targets (q, d)."""
     d = source_points.shape[1]
-    box = aabb_of_points(source_points)
-    pad = jnp.maximum(1e-6, 1e-6 * jnp.max(box.hi - box.lo))
-    bvh = build_bvh(source_points, box.lo - pad, box.hi + pad)
+    lo, hi = scene_bounds(source_points)
+    bvh = build_bvh(source_points, lo, hi)
     nn = knn(bvh, source_points, targets, k)
 
     def one(target, idx, dist):

@@ -19,7 +19,8 @@ import numpy as np
 
 NOISE = -1
 
-__all__ = ["dbscan_ref", "NOISE", "core_mask_ref", "labels_equivalent"]
+__all__ = ["dbscan_ref", "NOISE", "core_mask_ref", "labels_equivalent",
+           "halo_catalog_ref"]
 
 
 def _neighbor_matrix(points: np.ndarray, eps: float) -> np.ndarray:
@@ -63,6 +64,64 @@ def dbscan_ref(points: np.ndarray, eps: float, min_pts: int) -> np.ndarray:
             roots = [find(j) for j in np.nonzero(adj[i] & core)[0]]
             labels[i] = min(roots) if roots else NOISE
     return labels
+
+
+def halo_catalog_ref(points: np.ndarray, velocities: np.ndarray,
+                     labels: np.ndarray, capacity: int, min_count: int = 2,
+                     particle_mass: float = 1.0) -> dict:
+    """Pure-numpy oracle for ``halos.catalog.halo_catalog``.
+
+    Mirrors the exact contract: provisional halos are label roots in
+    ascending order, the first ``capacity`` of them are considered
+    (``overflow`` flags surplus), halos with fewer than ``min_count``
+    members are cut, survivors compact to slots 0..num_halos-1 keeping
+    ascending-root order. Float sums in float32 to match device numerics.
+    """
+    points = np.asarray(points, np.float32)
+    velocities = np.asarray(velocities, np.float32)
+    labels = np.asarray(labels)
+    roots_all = np.unique(labels[labels >= 0])
+    overflow = len(roots_all) > capacity
+    roots_prov = roots_all[:capacity]
+
+    rows = []
+    particle_halo = np.full(len(labels), -1, np.int64)
+    for r in roots_prov:
+        m = labels == r
+        cnt = int(m.sum())
+        if cnt < max(min_count, 1):
+            continue
+        x = points[m]
+        v = velocities[m]
+        center = x.sum(0, dtype=np.float32) / np.float32(cnt)
+        vmean = v.sum(0, dtype=np.float32) / np.float32(cnt)
+        ev2 = np.float32((v ** 2).sum(dtype=np.float32) / np.float32(cnt))
+        vdisp = np.sqrt(max(ev2 - np.float32((vmean ** 2).sum()), 0.0))
+        rmax = np.sqrt(((x - center) ** 2).sum(1).max()) if cnt else 0.0
+        particle_halo[m] = len(rows)
+        rows.append(dict(root=int(r), count=cnt,
+                         mass=np.float32(cnt) * np.float32(particle_mass),
+                         center=center, vmean=vmean, vdisp=np.float32(vdisp),
+                         rmax=np.float32(rmax)))
+
+    d = points.shape[1]
+    out = {
+        "num_halos": len(rows),
+        "overflow": bool(overflow),
+        "root": np.full(capacity, NOISE, np.int64),
+        "count": np.zeros(capacity, np.int64),
+        "mass": np.zeros(capacity, np.float32),
+        "center": np.zeros((capacity, d), np.float32),
+        "vmean": np.zeros((capacity, d), np.float32),
+        "vdisp": np.zeros(capacity, np.float32),
+        "rmax": np.zeros(capacity, np.float32),
+        "particle_halo": particle_halo,
+    }
+    for k, row in enumerate(rows):
+        for key in ("root", "count", "mass", "center", "vmean", "vdisp",
+                    "rmax"):
+            out[key][k] = row[key]
+    return out
 
 
 def labels_equivalent(a: np.ndarray, b: np.ndarray, core: np.ndarray,

@@ -52,10 +52,14 @@ def traverse_sphere_stackless(
     carry_init,                    # pytree, broadcast per query
     start_nodes: jax.Array | None = None,  # (q,) node ids; default root
 ):
-    """Rope-based stackless traversal, vmapped over queries."""
+    """Rope-based stackless traversal, vmapped over queries.
+
+    ``eps`` may be a traced scalar — including one batched by an outer
+    ``vmap`` (per-query radii, e.g. spherical-overdensity searches where
+    every halo probes its own R_Δ candidate; see ``halos/so_mass.py``)."""
     n = bvh.num_leaves
     eps2 = jnp.asarray(eps, centers.dtype) ** 2
-    root = jnp.int32(0) if n > 1 else jnp.int32(0)  # internal 0 is root for n>=2
+    root = jnp.int32(0)  # internal node 0 is the root (n >= 2)
 
     def one_query(center, start, carry0):
         def cond(state):

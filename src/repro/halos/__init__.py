@@ -1,0 +1,61 @@
+"""Halo-analysis subsystem: DBSCAN labels -> production halo catalogs.
+
+The paper's challenge problem (§2, HACC in-situ analysis) doesn't end at
+cluster labels: the deliverable every analysis step is a halo CATALOG —
+per-halo masses, centers, velocity dispersions — that feeds merger trees
+and downstream science (Rangel et al., "Building Halo Merger Trees from the
+Q Continuum Simulation"; Tokuue et al., "MPI-Rockstar"). This package is
+that production half, built on the repo's search index (``core/bvh.py``),
+kernels (``kernels/segment.py``) and distributed path
+(``core/distributed.py``).
+
+Module map
+----------
+
+``catalog.py``
+    Label canonicalization (sort/segment → dense halo ids) and the
+    fixed-capacity, jit-able segmented reductions: particle count, center
+    of mass, mean velocity, velocity dispersion, max radius; min-count
+    halo mass cut. Entry point: ``halo_catalog``.
+``centers.py``
+    Most-bound-particle proxy centers: softened ε-truncated potentials via
+    fused BVH ε-neighborhood traversals, per-halo argmin. Entry point:
+    ``most_bound_centers``.
+``so_mass.py``
+    Spherical-overdensity masses (M_Δ/R_Δ): fixed-iteration bisection on
+    the SO radius driven by per-query-radius BVH range counts. Entry
+    point: ``so_masses``.
+``merge.py``
+    Distributed catalog reduction composing with the sharded DBSCAN:
+    per-shard partial catalogs (raw per-root sums) merged by global root
+    label across shards, plus the centers-dependent max-radius second
+    pass. Entry points: ``halo_catalog_sharded`` (shard_map driver) and
+    the pure ``partial_catalog`` / ``merge_partial_catalogs`` pieces.
+
+Reductions run on the Pallas one-hot-matmul segment kernel
+(``kernels/segment.py``) on TPU and on the pure-JAX scatter oracle
+elsewhere (``backend=`` argument); both paths agree to float32 sums and are
+validated against ``core/ref_numpy.halo_catalog_ref``.
+"""
+from repro.halos.catalog import HaloCatalog, halo_catalog
+from repro.halos.centers import MostBoundResult, most_bound_centers
+from repro.halos.merge import (
+    PartialCatalog,
+    halo_catalog_sharded,
+    merge_partial_catalogs,
+    partial_catalog,
+)
+from repro.halos.so_mass import SoMassResult, so_masses
+
+__all__ = [
+    "HaloCatalog",
+    "halo_catalog",
+    "MostBoundResult",
+    "most_bound_centers",
+    "PartialCatalog",
+    "partial_catalog",
+    "merge_partial_catalogs",
+    "halo_catalog_sharded",
+    "SoMassResult",
+    "so_masses",
+]

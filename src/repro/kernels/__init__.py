@@ -1,7 +1,9 @@
-"""Pallas TPU kernels for the paper's compute hot spot — ε-neighborhood
+"""Pallas TPU kernels for the paper's compute hot spots — ε-neighborhood
 queries with fused callbacks (DESIGN.md §2): `pairwise.py` (pl.pallas_call
-+ BlockSpec kernels), `ops.py` (jit'd padded wrappers), `ref.py` (pure-jnp
-oracles for the allclose sweeps in tests/test_kernels.py)."""
-from repro.kernels import ops, ref
++ BlockSpec kernels), `segment.py` (segmented reductions over sorted halo
+ids, the catalog hot loop), `ops.py` (jit'd padded wrappers), `ref.py`
+(pure-jnp oracles for the allclose sweeps in tests/test_kernels.py and
+tests/test_halos.py)."""
+from repro.kernels import ops, ref, segment
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "segment"]

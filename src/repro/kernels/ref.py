@@ -15,6 +15,8 @@ __all__ = [
     "pairwise_min_label_ref",
     "stencil_count_ref",
     "stencil_min_label_ref",
+    "segment_sum_sorted_ref",
+    "segment_max_sorted_ref",
 ]
 
 
@@ -40,6 +42,23 @@ def stencil_count_ref(cell_pts, nbr_map, eps2):
         d2 = jnp.sum((cell_pts[:ncells, :, None, :] - cand[:, None, :, :]) ** 2, -1)
         counts = counts + jnp.sum(d2 <= eps2, axis=2).astype(jnp.int32)
     return counts
+
+
+def segment_sum_sorted_ref(data, seg_ids, num_segments):
+    """Oracle for ``segment.segment_sum_sorted`` (works for unsorted ids too;
+    the kernel additionally requires sorted+dense — see its docstring)."""
+    seg = jnp.clip(seg_ids.astype(jnp.int32), 0, num_segments - 1)
+    return jnp.zeros((num_segments, data.shape[1]), jnp.float32) \
+        .at[seg].add(data.astype(jnp.float32))
+
+
+def segment_max_sorted_ref(data, seg_ids, num_segments):
+    """Oracle for ``segment.segment_max_sorted``; empty segments come back at
+    ``-segment.SEG_NEG_BIG`` just like the kernel."""
+    from repro.kernels.segment import SEG_NEG_BIG
+    seg = jnp.clip(seg_ids.astype(jnp.int32), 0, num_segments - 1)
+    return jnp.full((num_segments, data.shape[1]), -SEG_NEG_BIG, jnp.float32) \
+        .at[seg].max(data.astype(jnp.float32))
 
 
 def stencil_min_label_ref(cell_pts, cell_labels, cell_core, nbr_map, eps2):

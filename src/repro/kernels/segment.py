@@ -1,0 +1,158 @@
+"""Pallas TPU segmented reductions over SORTED segments (halo catalogs).
+
+The halo-catalog hot loop (labels -> per-halo sums) is a segmented reduction:
+``out[s] = reduce(data[i] for i where seg_ids[i] == s)``. XLA lowers
+``.at[seg].add`` to a serial scatter on TPU; here the bulk of the work is
+reformulated as *tiled one-hot matmuls* on the MXU (the same trick that made
+the ε-neighborhood kernels in ``pairwise.py`` TPU-native):
+
+1. rows are processed in tiles of ``T`` sorted rows;
+2. each tile builds a (T, 2T) one-hot matrix of its rows' segment ids
+   RELATIVE to the tile's T-aligned base segment, and contracts it against the
+   (T, D) data tile on the MXU -> a (2T, D) aligned partial;
+3. partials land in T-aligned windows of the output, so the final combine is
+   a scatter-add of ``n/T`` contiguous (T, D) slabs — O(n/T) scatter updates
+   instead of O(n).
+
+Correctness requires the contract the catalog layer guarantees by
+construction: ``seg_ids`` is sorted ascending AND dense (every id in
+``[min_id, max_id]`` occurs at least once). Then a tile of T sorted rows
+spans at most T consecutive ids, so every row's id fits in the 2T-wide
+window anchored at ``(seg_ids[tile_start] // T) * T`` (the run of any id
+strictly inside the tile's id range lies entirely inside the tile).
+
+Two reductions, mirroring the catalog's needs:
+
+* ``segment_sum_sorted`` — MXU one-hot matmul accumulation (counts, centers
+  of mass, mean velocities, Σ|v|²);
+* ``segment_max_sorted`` — same tiling with a VPU masked-max epilogue
+  (per-halo max radius).
+
+Pure-jnp oracles with identical contracts live in ``kernels/ref.py``
+(``segment_sum_sorted_ref`` / ``segment_max_sorted_ref``). Padding: row
+padding appended by the wrappers reuses the last real segment id with
+neutral data (0 for sum, ``-SEG_NEG_BIG`` for max), so it never perturbs
+real segments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import INTERPRET
+
+SEG_NEG_BIG = 1e30  # neutral element magnitude for the max reduction
+
+__all__ = ["SEG_NEG_BIG", "segment_sum_sorted", "segment_max_sorted"]
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _sum_kernel(base_ref, seg_ref, x_ref, o_ref):
+    """One row tile -> one (2T, D) aligned partial via a one-hot matmul."""
+    t = seg_ref.shape[0]
+    base = base_ref[pl.program_id(0)]                      # T-aligned segment row
+    local = seg_ref[...] - base                            # in [0, 2T) by contract
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, 2 * t), 1)
+    onehot = (cols == local[:, None]).astype(jnp.float32)  # (T, 2T)
+    o_ref[0] = jax.lax.dot_general(
+        onehot, x_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (2T, D)
+
+
+def _max_kernel(base_ref, seg_ref, x_ref, o_ref):
+    t = seg_ref.shape[0]
+    base = base_ref[pl.program_id(0)]
+    local = seg_ref[...] - base
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, 2 * t), 1)
+    hit = cols == local[:, None]                            # (T, 2T)
+    cand = jnp.where(hit[:, :, None], x_ref[...][:, None, :], -SEG_NEG_BIG)
+    o_ref[0] = jnp.max(cand, axis=0)                        # (2T, D)
+
+
+def _prepare(data, seg_ids, num_segments, tile, pad_value):
+    """Pad rows/features to tile multiples; compute per-tile aligned bases."""
+    n, d = data.shape
+    npad = _round_up(max(n, tile), tile)
+    dp = _round_up(max(d, 1), 8)
+    x = jnp.pad(data.astype(jnp.float32), ((0, npad - n), (0, dp - d)),
+                constant_values=pad_value)
+    seg = jnp.clip(seg_ids.astype(jnp.int32), 0, num_segments - 1)
+    # Row padding reuses the LAST real id: stays sorted, window math holds.
+    seg = jnp.pad(seg, (0, npad - n), mode="edge" if n > 0 else "constant")
+    num_tiles = npad // tile
+    heads = seg[jnp.arange(num_tiles, dtype=jnp.int32) * tile]
+    blk = heads // tile                                     # aligned block index
+    return x, seg, blk, num_tiles, dp
+
+
+def _combine(partials, blk, num_segments, tile, d, dp, init, combine_at):
+    """Scatter the T-aligned (2T, D) partials into the (S, D) output:
+    n/T slab updates instead of n row updates."""
+    num_blocks = num_segments // tile + 2  # blk+1 always in range
+    out = jnp.full((num_blocks, tile, dp), init, jnp.float32)
+    out = combine_at(out, blk, partials[:, :tile, :])
+    out = combine_at(out, blk + 1, partials[:, tile:, :])
+    return out.reshape(num_blocks * tile, dp)[:num_segments, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "tile", "interpret"))
+def segment_sum_sorted(data: jax.Array, seg_ids: jax.Array, num_segments: int,
+                       *, tile: int = 128,
+                       interpret: bool = INTERPRET) -> jax.Array:
+    """out[s, :] = Σ data[i, :] over i with seg_ids[i] == s.
+
+    ``seg_ids`` must be sorted ascending and dense (see module docstring);
+    rows the caller wants excluded must be zeroed, not re-labeled.
+    """
+    n, d = data.shape
+    x, seg, blk, num_tiles, dp = _prepare(data, seg_ids, num_segments, tile, 0.0)
+    partials = pl.pallas_call(
+        _sum_kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, dp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * tile, dp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles, 2 * tile, dp), jnp.float32),
+        interpret=interpret,
+    )(blk * tile, seg, x)
+    return _combine(partials, blk, num_segments, tile, d, dp, 0.0,
+                    lambda o, idx, upd: o.at[idx].add(upd))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "tile", "interpret"))
+def segment_max_sorted(data: jax.Array, seg_ids: jax.Array, num_segments: int,
+                       *, tile: int = 128,
+                       interpret: bool = INTERPRET) -> jax.Array:
+    """out[s, :] = max data[i, :] over i with seg_ids[i] == s; empty segments
+    come back at ``-SEG_NEG_BIG`` (callers mask on their own count).
+
+    Same sorted+dense contract as ``segment_sum_sorted``; rows to exclude
+    must be set to ``-SEG_NEG_BIG`` by the caller.
+    """
+    n, d = data.shape
+    x, seg, blk, num_tiles, dp = _prepare(data, seg_ids, num_segments, tile,
+                                          -SEG_NEG_BIG)
+    partials = pl.pallas_call(
+        _max_kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, dp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * tile, dp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles, 2 * tile, dp), jnp.float32),
+        interpret=interpret,
+    )(blk * tile, seg, x)
+    return _combine(partials, blk, num_segments, tile, d, dp, -SEG_NEG_BIG,
+                    lambda o, idx, upd: o.at[idx].max(upd))

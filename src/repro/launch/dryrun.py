@@ -481,7 +481,9 @@ def _lower_compile(cfg, shape, mesh):
             "xla_dump_to": dump_dir,
             "xla_dump_hlo_pass_re": "spmd-partitioning",
         })
-        cost = dict(compiled.cost_analysis())
+        ca = compiled.cost_analysis()
+        # older JAX returns [dict] (one entry per device assignment)
+        cost = dict(ca[0] if isinstance(ca, (list, tuple)) else ca)
         mem = compiled.memory_analysis()
     hlo = _spmd_hlo(lowered, dump_dir)
     import shutil

@@ -5,8 +5,13 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: axis_types only exists on newer JAX."""
+    try:
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,10 +19,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     "pod" axis (2 pods = 512 chips). "pod" composes with "data" for DP/FSDP."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-process test mesh over whatever devices exist (1 on CPU)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,132 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` (optional dev dep).
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real package
+is missing, so the property tests still execute instead of crashing the whole
+collection. Supports exactly the subset this suite uses:
+
+* ``@given`` with positional strategies (mapped to the trailing test
+  parameters, matching hypothesis' convention) and keyword strategies;
+* ``@settings(max_examples=..., deadline=...)`` in either decorator order;
+* ``st.integers(lo, hi)``, ``st.floats(lo, hi)``,
+  ``st.lists(elem, min_size=..., max_size=...)``, ``st.tuples(*elems)``.
+
+Examples are drawn from a per-test seeded PRNG (stable across runs); the
+first example of every run is the "minimal" one (lower bounds / shortest
+lists) to keep a shrunk-style edge case in the mix. Install the real
+``hypothesis`` (see requirements-dev.txt) for actual shrinking and coverage.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+__version__ = "0.0-shim"
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, minimal_fn):
+        self._draw_fn = draw_fn
+        self._minimal_fn = minimal_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+    def minimal(self):
+        return self._minimal_fn()
+
+
+def _integers(min_value, max_value):
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          lambda: min_value)
+
+
+def _floats(min_value, max_value, **_kw):
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          lambda: min_value)
+
+
+def _lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        size = rng.randint(min_size, hi)
+        return [elements.draw(rng) for _ in range(size)]
+
+    return SearchStrategy(draw,
+                          lambda: [elements.minimal() for _ in range(min_size)])
+
+
+def _tuples(*elems):
+    return SearchStrategy(lambda rng: tuple(e.draw(rng) for e in elems),
+                          lambda: tuple(e.minimal() for e in elems))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.lists = _lists
+strategies.tuples = _tuples
+strategies.SearchStrategy = SearchStrategy
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(**kw):
+    """Attach run settings; composes with @given in either order."""
+
+    def deco(fn):
+        fn._shim_settings = kw
+        return fn
+
+    return deco
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition):
+    """Abort the current example when False (matches hypothesis semantics:
+    the given() loop skips it instead of failing)."""
+    if not condition:
+        raise _UnsatisfiedAssumption
+    return True
+
+
+class HealthCheck:  # referenced only via settings(suppress_health_check=...)
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def given(*pos_strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # Hypothesis maps positional strategies to the RIGHTMOST parameters.
+        pos_names = [p.name for p in params[-len(pos_strats):]] if pos_strats else []
+        strat_map = dict(zip(pos_names, pos_strats))
+        strat_map.update(kw_strats)
+        outer = [p for p in params if p.name not in strat_map]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_shim_settings", None) \
+                or getattr(fn, "_shim_settings", {})
+            n_examples = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.adler32(fn.__qualname__.encode()))
+            for ex in range(n_examples):
+                drawn = {name: (s.minimal() if ex == 0 else s.draw(rng))
+                         for name, s in strat_map.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _UnsatisfiedAssumption:
+                    continue  # assume() rejected this example; skip it
+
+        # Hide strategy-filled params from pytest's fixture resolution.
+        wrapper.__signature__ = sig.replace(parameters=outer)
+        return wrapper
+
+    return deco

@@ -3,8 +3,37 @@ tests and benches must see the real single CPU device. Only launch/dryrun.py
 sets --xla_force_host_platform_device_count (in its own process)."""
 from __future__ import annotations
 
+import importlib.util
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# Optional dev dependency: the property tests import hypothesis at module
+# scope, which used to crash the ENTIRE collection when it wasn't installed.
+# Fall back to the deterministic shim (see _hypothesis_shim.py) so the suite
+# always runs; install requirements-dev.txt for the real thing.
+try:  # pragma: no cover - trivial import probe
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_shim.py"))
+    _shim = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
+
+
+def abstract_mesh(sizes, names):
+    """AbstractMesh across JAX versions: <=0.4.x takes ((name, size), ...)
+    pairs; newer releases take (sizes, names)."""
+    import jax
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(sizes), tuple(names))
 
 
 def make_clustered_points(rng: np.random.Generator, n: int, d: int = 3,

@@ -7,18 +7,19 @@ import pytest
 
 # NOTE: importing repro.launch.dryrun sets XLA_FLAGS; harmless here because
 # jax is already initialized with 1 device by the time tests import it.
+from conftest import abstract_mesh
 from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
 from repro.launch import dryrun as dr
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def multi_mesh():
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_input_specs_shapes():

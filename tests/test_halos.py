@@ -1,0 +1,304 @@
+"""Halo-catalog subsystem vs the numpy oracle (labels -> production catalog)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_clustered_points
+from repro.core.dbscan import fdbscan
+from repro.core.ref_numpy import halo_catalog_ref
+from repro.halos import (
+    halo_catalog,
+    merge_partial_catalogs,
+    most_bound_centers,
+    partial_catalog,
+    so_masses,
+)
+from repro.halos.merge import finalize_rmax, local_rmax2, particle_slots
+from repro.kernels import segment as kseg
+from repro.kernels import ref as kref
+
+
+def _phase_space(rng, n, **kw):
+    pts = make_clustered_points(rng, n, **kw)
+    vel = rng.standard_normal((n, 3)).astype(np.float32)
+    return pts, vel
+
+
+def _assert_catalog_matches_ref(cat, ref):
+    assert int(cat.num_halos) == ref["num_halos"]
+    assert bool(cat.overflow) == ref["overflow"]
+    np.testing.assert_array_equal(np.asarray(cat.root), ref["root"])
+    np.testing.assert_array_equal(np.asarray(cat.count), ref["count"])
+    np.testing.assert_allclose(np.asarray(cat.mass), ref["mass"], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cat.center), ref["center"], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cat.vmean), ref["vmean"], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cat.vdisp), ref["vdisp"], atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cat.rmax), ref["rmax"], atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cat.particle_halo),
+                                  ref["particle_halo"])
+
+
+# --- segment kernels vs oracles ----------------------------------------------
+
+@pytest.mark.parametrize("n,s,d,tile", [(1000, 37, 8, 128), (130, 5, 3, 32),
+                                        (50, 50, 1, 16), (700, 1, 4, 64)])
+def test_segment_kernels_match_ref(rng, n, s, d, tile):
+    sizes = rng.pareto(1.2, s).astype(int) + 1
+    reps = np.repeat(np.arange(s), sizes)
+    reps = (reps[:n] if len(reps) >= n
+            else np.concatenate([reps, np.full(n - len(reps), s - 1)]))
+    _, seg = np.unique(reps, return_inverse=True)   # sorted + dense
+    num = int(seg.max()) + 1
+    data = rng.standard_normal((n, d)).astype(np.float32)
+    seg_j, data_j = jnp.asarray(seg, jnp.int32), jnp.asarray(data)
+    np.testing.assert_allclose(
+        np.asarray(kseg.segment_sum_sorted(data_j, seg_j, num, tile=tile)),
+        np.asarray(kref.segment_sum_sorted_ref(data_j, seg_j, num)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(kseg.segment_max_sorted(data_j, seg_j, num, tile=tile)),
+        np.asarray(kref.segment_max_sorted_ref(data_j, seg_j, num)),
+        rtol=1e-5, atol=1e-5)
+
+
+# --- catalog vs numpy oracle --------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("min_pts", [2, 5])
+def test_catalog_matches_ref_on_dbscan_labels(rng, backend, min_pts):
+    pts, vel = _phase_space(rng, 400)
+    labels = np.asarray(fdbscan(jnp.asarray(pts), 0.07, min_pts).labels)
+    cat = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                       jnp.asarray(labels), capacity=32, min_count=min_pts,
+                       backend=backend)
+    _assert_catalog_matches_ref(
+        cat, halo_catalog_ref(pts, vel, labels, 32, min_pts))
+
+
+def test_pallas_path_agrees_with_jax_path(rng):
+    pts, vel = _phase_space(rng, 600)
+    labels = np.asarray(fdbscan(jnp.asarray(pts), 0.07, 5).labels)
+    a = halo_catalog(jnp.asarray(pts), jnp.asarray(vel), jnp.asarray(labels),
+                     capacity=64, min_count=5, backend="jax")
+    b = halo_catalog(jnp.asarray(pts), jnp.asarray(vel), jnp.asarray(labels),
+                     capacity=64, min_count=5, backend="pallas")
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_catalog_all_noise(rng):
+    pts, vel = _phase_space(rng, 100)
+    labels = np.full(100, -1, np.int32)
+    cat = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                       jnp.asarray(labels), capacity=8)
+    assert int(cat.num_halos) == 0 and not bool(cat.overflow)
+    assert (np.asarray(cat.particle_halo) == -1).all()
+    assert (np.asarray(cat.count) == 0).all()
+    assert (np.asarray(cat.root) == -1).all()
+
+
+def test_catalog_single_giant_halo(rng):
+    pts, vel = _phase_space(rng, 300)
+    labels = np.zeros(300, np.int32)
+    cat = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                       jnp.asarray(labels), capacity=8)
+    ref = halo_catalog_ref(pts, vel, labels, 8)
+    _assert_catalog_matches_ref(cat, ref)
+    assert int(cat.count[0]) == 300
+
+
+def test_catalog_empty_halo_slots_and_mass_cut(rng):
+    """Halos below min_count vanish; survivors compact in root order."""
+    pts, vel = _phase_space(rng, 60)
+    labels = np.array([0] * 30 + [40] * 3 + [50] * 20 + [-1] * 7, np.int32)
+    cat = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                       jnp.asarray(labels), capacity=8, min_count=5)
+    assert int(cat.num_halos) == 2
+    np.testing.assert_array_equal(np.asarray(cat.root)[:3], [0, 50, -1])
+    np.testing.assert_array_equal(np.asarray(cat.count)[:3], [30, 20, 0])
+    # cut halo's members map to no slot
+    assert (np.asarray(cat.particle_halo)[30:33] == -1).all()
+    _assert_catalog_matches_ref(cat, halo_catalog_ref(pts, vel, labels, 8, 5))
+
+
+def test_catalog_capacity_overflow(rng):
+    pts, vel = _phase_space(rng, 90)
+    labels = np.repeat(np.arange(9) * 10, 10).astype(np.int32)
+    cat = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                       jnp.asarray(labels), capacity=4, min_count=2)
+    ref = halo_catalog_ref(pts, vel, labels, 4, 2)
+    assert bool(cat.overflow)
+    _assert_catalog_matches_ref(cat, ref)
+
+
+# --- most-bound centers / SO masses ------------------------------------------
+
+def test_most_bound_center_is_member_and_argmin(rng):
+    pts, vel = _phase_space(rng, 250)
+    eps = 0.07
+    labels = np.asarray(fdbscan(jnp.asarray(pts), eps, 5).labels)
+    cat = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                       jnp.asarray(labels), capacity=16, min_count=5)
+    mb = most_bound_centers(jnp.asarray(pts), cat.particle_halo, eps,
+                            capacity=16)
+    ph = np.asarray(cat.particle_halo)
+    soft2 = (eps * 1e-2) ** 2
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    phi = -np.where(d2 <= eps * eps, 1.0 / np.sqrt(d2 + soft2), 0).sum(1)
+    for h in range(int(cat.num_halos)):
+        i = int(mb.index[h])
+        assert ph[i] == h
+        members = np.nonzero(ph == h)[0]
+        assert phi[i] <= phi[members].min() + 1e-3
+    for h in range(int(cat.num_halos), 16):
+        assert int(mb.index[h]) == -1
+
+
+def test_so_mass_uniform_ball():
+    """Uniform-density ball: R_Δ is where the ball's density ratio crosses
+    Δ — analytically checkable."""
+    rng = np.random.default_rng(0)
+    n = 4000
+    r_ball = 0.1
+    u = rng.uniform(0, 1, n) ** (1 / 3)
+    direction = rng.standard_normal((n, 3))
+    direction /= np.linalg.norm(direction, axis=1, keepdims=True)
+    pts = (0.5 + r_ball * u[:, None] * direction).astype(np.float32)
+    # ball density / mean box density = (n / (4/3 π r³)) / n = 1 / (4/3 π r³)
+    ratio = 1.0 / (4.0 / 3.0 * np.pi * r_ball ** 3)
+    delta = ratio / 8.0   # target crossing at R_Δ = r_ball (enclosed ∝ r³)
+    centers = jnp.asarray(np.array([[0.5, 0.5, 0.5]], np.float32))
+    so = so_masses(jnp.asarray(pts), centers, jnp.asarray([True]),
+                   delta=delta, r_max=0.5, iters=24)
+    # inside the ball density is flat at ratio > delta; outside it falls as
+    # r^-3: crossing at r where ratio * (r_ball/r)^3 = delta -> r = 2 r_ball
+    assert float(so.r_delta[0]) == pytest.approx(2 * r_ball, rel=0.05)
+    assert int(so.count[0]) == n  # the whole ball is enclosed
+    assert bool(so.bracketed[0])
+    # too-small bracket: flagged unbracketed, R_Δ clamped near r_max
+    so_clamped = so_masses(jnp.asarray(pts), centers, jnp.asarray([True]),
+                           delta=delta, r_max=0.05, iters=24)
+    assert not bool(so_clamped.bracketed[0])
+    assert float(so_clamped.r_delta[0]) == pytest.approx(0.05, rel=1e-3)
+
+
+# --- sharded merge == single-device ------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_merge_partials_equals_single_device(rng, n_shards):
+    pts, vel = _phase_space(rng, 480)
+    order = np.argsort(pts[:, 0], kind="stable")
+    pts, vel = pts[order], vel[order]
+    labels = np.asarray(fdbscan(jnp.asarray(pts), 0.07, 5).labels)
+    cap = 32
+    single = halo_catalog(jnp.asarray(pts), jnp.asarray(vel),
+                          jnp.asarray(labels), capacity=cap, min_count=5)
+
+    chunks = np.array_split(np.arange(len(pts)), n_shards)
+    roots, sums = [], []
+    for c in chunks:
+        part = partial_catalog(jnp.asarray(pts[c]), jnp.asarray(vel[c]),
+                               jnp.asarray(labels[c]), capacity=cap)
+        roots.append(np.asarray(part.root))
+        sums.append(np.asarray(part.sums))
+    merged = merge_partial_catalogs(
+        jnp.asarray(np.concatenate(roots)), jnp.asarray(np.concatenate(sums)),
+        capacity=cap, min_count=5)
+    rmax2 = jnp.full((cap,), -kseg.SEG_NEG_BIG)
+    for c in chunks:
+        rmax2 = jnp.maximum(rmax2, local_rmax2(jnp.asarray(pts[c]),
+                                               jnp.asarray(labels[c]), merged))
+    merged = finalize_rmax(merged, rmax2)
+
+    assert int(merged.num_halos) == int(single.num_halos)
+    for field in ("root", "count"):
+        np.testing.assert_array_equal(np.asarray(getattr(merged, field)),
+                                      np.asarray(getattr(single, field)))
+    for field in ("mass", "center", "vmean", "vdisp", "rmax"):
+        np.testing.assert_allclose(np.asarray(getattr(merged, field)),
+                                   np.asarray(getattr(single, field)),
+                                   atol=1e-4)
+    # per-shard slot maps agree with the single-device particle map
+    for c in chunks:
+        np.testing.assert_array_equal(
+            np.asarray(particle_slots(jnp.asarray(labels[c]), merged)),
+            np.asarray(single.particle_halo)[c])
+
+
+def test_sharded_catalog_on_mesh_matches_single_device():
+    """shard_map driver == single device (subprocess: needs >1 CPU device)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax, jax.numpy as jnp
+        import sys
+        sys.path.insert(0, {tests_dir!r})
+        from conftest import make_clustered_points
+        from repro.core.dbscan import fdbscan
+        from repro.halos import halo_catalog, halo_catalog_sharded
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(3)
+        n = 512
+        pts = make_clustered_points(rng, n)
+        pts = pts[np.argsort(pts[:, 0], kind="stable")]
+        vel = rng.standard_normal((n, 3)).astype(np.float32)
+        labels = fdbscan(jnp.asarray(pts), 0.07, 5).labels
+        cap = 32
+        single = halo_catalog(jnp.asarray(pts), jnp.asarray(vel), labels,
+                              capacity=cap, min_count=5)
+        sharded = halo_catalog_sharded(jnp.asarray(pts), jnp.asarray(vel),
+                                       labels, mesh=mesh, capacity=cap,
+                                       min_count=5)
+        assert int(sharded.num_halos) == int(single.num_halos)
+        np.testing.assert_array_equal(np.asarray(sharded.root),
+                                      np.asarray(single.root))
+        np.testing.assert_array_equal(np.asarray(sharded.count),
+                                      np.asarray(single.count))
+        for f in ("mass", "center", "vmean", "vdisp", "rmax"):
+            np.testing.assert_allclose(np.asarray(getattr(sharded, f)),
+                                       np.asarray(getattr(single, f)),
+                                       atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(sharded.particle_halo),
+                                      np.asarray(single.particle_halo))
+        print("SHARDED_CAT_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(tests_dir), "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_CAT_OK" in out.stdout
+
+
+# --- in-situ halo-stats mode --------------------------------------------------
+
+def test_simulation_halo_stats_keys_and_finiteness(rng):
+    from repro.analysis.insitu import InsituConfig, simulation_halo_stats
+    pts, vel = _phase_space(rng, 300)
+    stats = simulation_halo_stats(jnp.asarray(pts), jnp.asarray(vel),
+                                  InsituConfig(min_pts=5, halo_min_count=5),
+                                  0.07)
+    assert set(stats) >= {"insitu/halo_num", "insitu/halo_largest",
+                          "insitu/halo_mass_frac", "insitu/halo_vdisp_mean"}
+    for v in stats.values():
+        assert bool(jnp.all(jnp.isfinite(jnp.asarray(v, jnp.float32))))
+    assert int(stats["insitu/halo_num"]) >= 1
+
+
+def test_analyzer_simulation_mode(rng):
+    from repro.analysis.insitu import InsituAnalyzer, InsituConfig
+    pts, vel = _phase_space(rng, 300)
+    an = InsituAnalyzer(InsituConfig(mode="simulation", cadence=1, min_pts=5,
+                                     halo_min_count=5))
+    out = an.maybe_run({"positions": jnp.asarray(pts),
+                        "velocities": jnp.asarray(vel), "eps": 0.07}, 0)
+    assert out and all(k.startswith("insitu/halo") for k in out)

@@ -11,11 +11,14 @@ from repro.models.spec import TensorSpec
 from repro.parallel import sharding as shd
 
 
+from conftest import abstract_mesh
+
+
 @pytest.fixture(scope="module")
 def meshes():
     # 1-device meshes can't test divisibility; build ABSTRACT meshes instead.
-    single = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
-    multi = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    single = abstract_mesh((16, 16), ("data", "model"))
+    multi = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     return single, multi
 
 
@@ -97,7 +100,7 @@ def test_decode_score_pspec(meshes):
 def test_param_pspecs_tree():
     from repro.configs import get_config
     from repro.models import lm
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     spec = lm.model_spec(get_config("gemma2-9b"))
     pspecs = shd.param_pspecs(spec, mesh)
     # embed (256000, 3584): vocab/model, embed/data
