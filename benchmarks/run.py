@@ -18,7 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_insitu, fig4_timeline, halo_pipeline,
-                            kernels_micro, table1_morton)
+                            kernels_micro, query_micro, table1_morton)
 
     suites = {
         "table1": lambda: table1_morton.main(n=(1 << 15) if args.fast else (1 << 18)),
@@ -26,6 +26,7 @@ def main() -> None:
         "fig1": fig1_insitu.main,
         "kernels": kernels_micro.main,
         "halos": lambda: halo_pipeline.main(fast=args.fast),
+        "query": lambda: query_micro.main(fast=args.fast),
     }
     print("name,us_per_call,derived")
     failures = []

@@ -1,8 +1,11 @@
 """Quickstart: the paper's contribution in 30 lines.
 
 Cluster a cosmology-style point cloud with FDBSCAN (the ArborX algorithm,
-§4.3.3) and with the TPU-native tiled-grid implementation, and check they
-agree. Runs on CPU in seconds.
+§4.3.3), tour the unified query API behind it (§4.1), then cross-check
+against the TPU-native tiled-grid implementation. The FDBSCAN and
+query-API sections run on CPU in seconds; the final grid section runs the
+Pallas kernels in interpret mode on CPU and takes several minutes (it is
+the fast path on the TPU target).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -28,7 +31,41 @@ n_noise = int((np.asarray(res.labels) < 0).sum())
 print(f"FDBSCAN:  {int((np.asarray(res.labels) >= 0).sum())} clustered, "
       f"{n_noise} noise, union rounds={int(res.num_rounds)}")
 
+# --- the query API ----------------------------------------------------------
+# FDBSCAN above is a thin client of ONE engine (the paper's §4.1 story):
+# query(index, predicates, callback). Build the tree once, then dispatch any
+# predicate against it — fused callbacks, CSR outputs, kNN — all through the
+# same entry point (with Morton query sorting a flip of a switch).
+from repro.core.bvh import build_bvh
+from repro.core.geometry import scene_bounds
+from repro.core.query import nearest, query, query_count, query_csr, within
+
+jp = jnp.asarray(points)
+lo, hi = scene_bounds(jp)
+bvh = build_bvh(jp, lo, hi)
+
+# 1. range counts with early exit (DBSCAN's core test IS this call;
+#    counts saturate at stop_at — only the >= min_pts verdict matters):
+counts = query_count(bvh, within(jp, eps), stop_at=min_pts)
+
+# 2. full neighbor lists as two-pass count-then-fill CSR:
+offsets, indices = query_csr(bvh, within(jp, eps))
+
+# 3. a fused callback: sum of neighbor indices, no storage at all —
+#    must agree with the CSR materialization of the same predicate:
+def cb(acc, q_idx, obj_idx, d2):   # invoked per ε-pair, d2 = squared dist
+    return acc + obj_idx, jnp.bool_(False)
+sums = query(bvh, within(jp, eps), cb, jnp.int32(0), sort_queries=True)
+assert int(sums.sum()) == int(indices.sum())
+
+# 4. k nearest neighbors through the same dispatcher:
+nn = query(bvh, nearest(jp[:8], k=4))
+
+print(f"query API: {int((counts >= min_pts).sum())} core points, "
+      f"CSR nnz={int(offsets[-1])}, knn[0]={np.asarray(nn.indices[0])}")
+
 # --- TPU-native tier: ε-cell binning + MXU stencil kernels -----------------
+# (interpret-mode on CPU: this section takes several minutes here.)
 dims = grid_dims_for(np.zeros(3), np.ones(3), eps)
 res_g, overflowed = fdbscan_grid(
     jnp.asarray(points), eps, min_pts,

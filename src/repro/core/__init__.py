@@ -2,11 +2,15 @@
 DBSCAN clustering, reimplemented for JAX/TPU.
 
 Faithful tier (GPU-paper semantics, validated against the numpy oracle):
-  morton, bvh (LBVH + ropes), traversal (stack / stackless / pair),
-  union_find, dbscan (graph-CC, FDBSCAN, FDBSCAN-pair, FDBSCAN-DenseBox),
-  knn (priority-queue nearest search), emst (Boruvka Euclidean MST),
-  correlation (2-pt pair counts), interpolate (MLS), raycast — the full
-  ArborX §3.2 functionality surface.
+  morton, bvh (LBVH + ropes), query (the UNIFIED ENGINE, §4.1: predicate
+  constructors within/intersects_box/nearest/ray, stackless/stack/pair
+  backends, fused callbacks with early exit, two-pass CSR + buffered
+  single-pass output protocols, Morton query sorting), union_find, and
+  its thin clients: dbscan (graph-CC, FDBSCAN, FDBSCAN-pair,
+  FDBSCAN-DenseBox), knn, emst (Boruvka Euclidean MST), correlation
+  (2-pt pair counts), interpolate (MLS), raycast — the full ArborX §3.2
+  functionality surface. ``traversal`` keeps the pre-engine entry points
+  as compatibility shims.
 
 TPU-native tier (the production path):
   cell_grid + fdbscan_grid (tiled ε-stencil DBSCAN on the MXU, backed by
@@ -25,6 +29,24 @@ from repro.core.dbscan import (
 )
 from repro.core.geometry import Aabb, aabb_of_points
 from repro.core.morton import morton32, morton64, normalize_points
+from repro.core.query import (
+    IntersectsBox,
+    Nearest,
+    NearestResult,
+    Ray,
+    RayResult,
+    Within,
+    intersects_box,
+    nearest,
+    node_reduce,
+    query,
+    query_count,
+    query_csr,
+    query_csr_buffered,
+    query_fixed,
+    ray,
+    within,
+)
 from repro.core.traversal import (
     pair_traverse_sphere,
     traverse_sphere_stack,
@@ -44,6 +66,11 @@ __all__ = [
     "dbscan_graph_cc", "fdbscan", "fdbscan_densebox", "fdbscan_pair",
     "Aabb", "aabb_of_points",
     "morton32", "morton64", "normalize_points",
+    "Within", "IntersectsBox", "Nearest", "Ray",
+    "NearestResult", "RayResult",
+    "within", "intersects_box", "nearest", "ray",
+    "query", "query_count", "query_csr", "query_csr_buffered", "query_fixed",
+    "node_reduce",
     "pair_traverse_sphere", "traverse_sphere_stack", "traverse_sphere_stackless",
     "KnnResult", "knn", "EmstResult", "emst",
     "pair_count_histogram", "two_point_correlation",

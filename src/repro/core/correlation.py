@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.bvh import build_bvh
 from repro.core.geometry import scene_bounds
-from repro.core.traversal import pair_traverse_sphere
+from repro.core.query import query, within
 
 __all__ = ["pair_count_histogram", "two_point_correlation"]
 
@@ -24,24 +24,20 @@ __all__ = ["pair_count_histogram", "two_point_correlation"]
 @partial(jax.jit, static_argnames=("n_bins",))
 def pair_count_histogram(points: jax.Array, r_max, n_bins: int = 16) -> jax.Array:
     """DD(r): counts of unordered pairs with dist in each of n_bins equal
-    bins over (0, r_max]. Fused into the pair traversal — no pair list is
-    ever materialized (the paper's callback principle)."""
-    n = points.shape[0]
+    bins over (0, r_max]. A fused engine callback on the pair backend — no
+    pair list is ever materialized (the paper's callback principle), and
+    the engine hands the callback the squared pair distance directly."""
     lo, hi = scene_bounds(points)
     bvh = build_bvh(points, lo, hi)
     r_max_f = jnp.asarray(r_max, points.dtype)
-    r2_max = r_max_f ** 2
 
-    def fn(hist, i, j):
-        d2 = jnp.sum((points[j] - points[i]) ** 2)
-        hit = d2 <= r2_max
+    def fn(hist, i, j, d2):
         b = jnp.floor(jnp.sqrt(jnp.maximum(d2, 1e-30)) / r_max_f * n_bins)
         b = jnp.clip(b.astype(jnp.int32), 0, n_bins - 1)
-        hist = jnp.where(hit, hist.at[b].add(1), hist)
-        return hist, jnp.bool_(False)
+        return hist.at[b].add(1), jnp.bool_(False)
 
     hist0 = jnp.zeros((n_bins,), jnp.int32)
-    per_query = pair_traverse_sphere(bvh, points, r_max_f, fn, hist0)
+    per_query = query(bvh, within(points, r_max_f), fn, hist0, backend="pair")
     return jnp.sum(per_query, axis=0)
 
 

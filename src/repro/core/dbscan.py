@@ -1,5 +1,11 @@
 """DBSCAN variants from the paper (§4.3), faithful tier in pure JAX.
 
+Every ε-search here — neighbor counts with minPts early exit, the
+min-label union passes, graph_cc's bounded neighbor buffers, pair
+capture — is one ``core.query`` engine call (``within`` predicates +
+fused callbacks / the fixed-capacity output protocol / the pair
+backend); this module only contributes the clustering logic around it.
+
 Variants, matching the Fig. 4 improvement ladder:
 
 * ``dbscan_graph_cc``   — initial implementation (§4.3.1): materialize the
@@ -40,11 +46,7 @@ from repro.core import union_find
 from repro.core.bvh import Bvh, build_bvh, build_bvh_objects
 from repro.core.cell_grid import CellGrid, build_cell_grid, cell_box
 from repro.core.geometry import scene_bounds as _scene
-from repro.core.traversal import (
-    pair_traverse_sphere,
-    traverse_sphere_stack,
-    traverse_sphere_stackless,
-)
+from repro.core.query import query, query_count, query_fixed, within
 
 NOISE = jnp.int32(-1)
 
@@ -73,20 +75,12 @@ def count_neighbors(bvh: Bvh, points: jax.Array, queries: jax.Array, eps,
                     min_pts: int | None = None, use_stack: bool = False) -> jax.Array:
     """ε-neighbor counts for each query (neighborhood includes the point
     itself). With ``min_pts`` set, counting STOPS at min_pts (early
-    termination; returned counts saturate there)."""
-    eps2 = jnp.asarray(eps, points.dtype) ** 2
-
-    # Close over per-query centers via a wrapper (vmap binds the center).
-    def run(center):
-        def fn(count, j, _sorted):
-            hit = jnp.sum((points[j] - center) ** 2) <= eps2
-            count = count + hit.astype(jnp.int32)
-            done = jnp.bool_(False) if min_pts is None else count >= min_pts
-            return count, done
-        trav = traverse_sphere_stack if use_stack else traverse_sphere_stackless
-        return trav(bvh, center[None], eps, fn, jnp.int32(0))[0]
-
-    return jax.vmap(run)(queries)
+    termination; returned counts saturate there). ``points`` is kept in
+    the signature for backward compatibility — the engine tests against
+    leaf volumes directly."""
+    return query_count(bvh, within(queries, jnp.asarray(eps, points.dtype)),
+                       stop_at=min_pts,
+                       backend="stack" if use_stack else "stackless")
 
 
 def _core_mask(bvh, points, eps, min_pts, early_stop=True, use_stack=False):
@@ -102,19 +96,14 @@ def _core_mask(bvh, points, eps, min_pts, early_stop=True, use_stack=False):
 
 def _min_core_label_pass(bvh, points, eps, parent, core, queries_mask, n):
     """For each point i with queries_mask[i], traverse and return
-    min over core ε-neighbors j of parent[j] (n if none)."""
-    eps2 = jnp.asarray(eps, points.dtype) ** 2
+    min over core ε-neighbors j of parent[j] (n if none). One engine
+    callback; the ε test is the engine's predicate gate."""
+    def fn(best, _qi, j, _d2):
+        return jnp.where(core[j], jnp.minimum(best, parent[j]), best), jnp.bool_(False)
 
-    def run(center, active):
-        def fn(best, j, _sorted):
-            hit = (jnp.sum((points[j] - center) ** 2) <= eps2) & core[j]
-            best = jnp.where(hit, jnp.minimum(best, parent[j]), best)
-            return best, jnp.bool_(False)
-
-        out = traverse_sphere_stackless(bvh, center[None], eps, fn, jnp.int32(n))[0]
-        return jnp.where(active, out, jnp.int32(n))
-
-    return jax.vmap(run)(points, queries_mask)
+    out = query(bvh, within(points, jnp.asarray(eps, points.dtype)),
+                fn, jnp.int32(n))
+    return jnp.where(queries_mask, out, jnp.int32(n))
 
 
 def _finish_labels(parent, border_candidate, core, n):
@@ -181,21 +170,12 @@ def dbscan_graph_cc(points: jax.Array, eps, min_pts: int,
     n = points.shape[0]
     lo, hi = _scene(points)
     bvh = build_bvh(points, lo, hi, use_64bit=use_64bit)
-    eps2 = jnp.asarray(eps, points.dtype) ** 2
 
-    def run(center):
-        def fn(carry, j, _sorted):
-            buf, cnt = carry
-            hit = jnp.sum((points[j] - center) ** 2) <= eps2
-            slot = jnp.clip(cnt, 0, neighbor_capacity - 1)
-            buf = jnp.where(hit, buf.at[slot].set(j), buf)
-            cnt = cnt + hit.astype(jnp.int32)
-            return (buf, cnt), jnp.bool_(False)
-
-        buf0 = jnp.full((neighbor_capacity,), -1, jnp.int32)
-        return traverse_sphere_stackless(bvh, center[None], eps, fn, (buf0, jnp.int32(0)))
-
-    nbrs, counts = jax.vmap(lambda c: jax.tree.map(lambda x: x[0], run(c)))(points)
+    # The engine's fixed-capacity output protocol IS the documented
+    # drawback: surplus neighbors overwrite the last slot.
+    nbrs, counts, _overflow = query_fixed(
+        bvh, within(points, jnp.asarray(eps, points.dtype)),
+        capacity=neighbor_capacity)
     core = counts >= min_pts
 
     # Core-core edges from the stored graph.
@@ -231,27 +211,23 @@ def fdbscan_pair(points: jax.Array, eps, min_pts: int,
     n = points.shape[0]
     lo, hi = _scene(points)
     bvh = build_bvh(points, lo, hi, use_64bit=use_64bit)
-    eps2 = jnp.asarray(eps, points.dtype) ** 2
 
     core = _core_mask(bvh, points, eps, min_pts, early_stop=True)
 
     def capture(parent):
-        def run(unused_center, i):
-            def fn(carry, i_orig, j_orig):
-                buf, cnt = carry
-                hit = (jnp.sum((points[j_orig] - points[i_orig]) ** 2) <= eps2)
-                hit = hit & core[i_orig] & core[j_orig] & (parent[i_orig] != parent[j_orig])
-                slot = jnp.clip(cnt, 0, edge_capacity - 1)
-                buf = jnp.where(hit, buf.at[slot].set(j_orig), buf)
-                cnt = cnt + hit.astype(jnp.int32)
-                return (buf, cnt), cnt >= edge_capacity
+        # Engine pair backend: callback sees each unordered ε-pair once,
+        # already distance-gated; carries come back in sorted query order.
+        def fn(carry, i_orig, j_orig, _d2):
+            buf, cnt = carry
+            take = core[i_orig] & core[j_orig] & (parent[i_orig] != parent[j_orig])
+            slot = jnp.clip(cnt, 0, edge_capacity - 1)
+            buf = jnp.where(take, buf.at[slot].set(j_orig), buf)
+            cnt = cnt + take.astype(jnp.int32)
+            return (buf, cnt), cnt >= edge_capacity
 
-            buf0 = jnp.full((edge_capacity,), -1, jnp.int32)
-            return fn, buf0
-
-        fn, buf0 = run(None, None)
-        buf, cnt = pair_traverse_sphere(bvh, points, eps, fn, (buf0, jnp.int32(0)))
-        return buf, cnt
+        buf0 = jnp.full((edge_capacity,), -1, jnp.int32)
+        return query(bvh, within(points, jnp.asarray(eps, points.dtype)),
+                     fn, (buf0, jnp.int32(0)), backend="pair")
 
     def cond(state):
         _, changed, overflow, r = state
@@ -352,37 +328,40 @@ def fdbscan_densebox(points: jax.Array, eps, min_pts: int,
         return out
 
     # --- Phase 1: core classification. Dense-cell points are core for free. --
-    def count_query(center, active):
-        def leaf_fn(count, t, _sorted):
-            # t = grid-sorted object index.
-            def on_cell(count):
-                # Whole cell within eps? add run_length wholesale.
-                far2 = jnp.sum(jnp.maximum(jnp.abs(center - (cell_lo[t] + cell_hi[t]) * 0.5)
-                                           + grid.cell_size * 0.5, 0.0) ** 2)
-                whole = far2 <= eps2
+    # Engine callback over the mixed tree: the predicate gate tests the leaf
+    # VOLUME (cell box or point), so cells outside ε are skipped wholesale.
+    def count_cb(count, qi, t, _d2):
+        # qi = grid-sorted query index, t = grid-sorted object index. The
+        # center gather is loop-invariant in qi; XLA's LICM hoists it out
+        # of the traversal loop (timed: no cost vs the old vmap closure).
+        center = pts_sorted[qi]
 
-                def scan_cell(c):
-                    def step(cc, u):
-                        hit = jnp.sum((pts_sorted[u] - center) ** 2) <= eps2
-                        return cc + hit.astype(jnp.int32)
-                    return cell_scan(center, grid.run_start[t], grid.run_length[t], c, step)
+        def on_cell(count):
+            # Whole cell within eps? add run_length wholesale.
+            far2 = jnp.sum(jnp.maximum(jnp.abs(center - (cell_lo[t] + cell_hi[t]) * 0.5)
+                                       + grid.cell_size * 0.5, 0.0) ** 2)
+            whole = far2 <= eps2
 
-                return jnp.where(whole, count + grid.run_length[t], scan_cell(count))
+            def scan_cell(c):
+                def step(cc, u):
+                    hit = jnp.sum((pts_sorted[u] - center) ** 2) <= eps2
+                    return cc + hit.astype(jnp.int32)
+                return cell_scan(center, grid.run_start[t], grid.run_length[t], c, step)
 
-            def on_point(count):
-                hit = jnp.sum((pts_sorted[t] - center) ** 2) <= eps2
-                return count + hit.astype(jnp.int32)
+            return jnp.where(whole, count + grid.run_length[t], scan_cell(count))
 
-            count = jnp.where(
-                skip_leaf[t], count,
-                jnp.where(leaf_is_cell[t], on_cell(count), on_point(count)))
-            return count, count >= min_pts
+        def on_point(count):
+            hit = jnp.sum((pts_sorted[t] - center) ** 2) <= eps2
+            return count + hit.astype(jnp.int32)
 
-        out = traverse_sphere_stackless(bvh, center[None], eps_f, leaf_fn, jnp.int32(0))[0]
-        return jnp.where(active, out, jnp.int32(0))
+        count = jnp.where(
+            skip_leaf[t], count,
+            jnp.where(leaf_is_cell[t], on_cell(count), on_point(count)))
+        return count, count >= min_pts
 
     # Queries only for loose (non-dense-cell) points, in grid-sorted order.
-    counts_s = jax.vmap(count_query)(pts_sorted, ~dense_s)
+    counts_s = query(bvh, within(pts_sorted, eps_f), count_cb, jnp.int32(0))
+    counts_s = jnp.where(~dense_s, counts_s, jnp.int32(0))
     core_s = dense_s | (counts_s >= min_pts)
     core = jnp.zeros(n, bool).at[grid.perm].set(core_s)
 
@@ -397,36 +376,35 @@ def fdbscan_densebox(points: jax.Array, eps, min_pts: int,
         # Per-cell current min label (for wholesale cell hits).
         cell_lab = seg_min_per_point(parent[grid.perm], grid.run_start, grid.run_length)
 
-        def run(center, active):
-            def leaf_fn(best, t, _sorted):
-                def on_cell(best):
-                    far2 = jnp.sum((jnp.maximum(jnp.abs(center - (cell_lo[t] + cell_hi[t]) * 0.5), 0.0)
-                                    + grid.cell_size * 0.5) ** 2)
-                    whole = far2 <= eps2
+        def cb(best, qi, t, _d2):
+            center = pts_sorted[qi]
 
-                    def scan_cell(b):
-                        def step(bb, u):
-                            hit = jnp.sum((pts_sorted[u] - center) ** 2) <= eps2
-                            return jnp.where(hit, jnp.minimum(bb, parent[grid.perm[u]]), bb)
-                        return cell_scan(center, grid.run_start[t], grid.run_length[t], b, step)
+            def on_cell(best):
+                far2 = jnp.sum((jnp.maximum(jnp.abs(center - (cell_lo[t] + cell_hi[t]) * 0.5), 0.0)
+                                + grid.cell_size * 0.5) ** 2)
+                whole = far2 <= eps2
 
-                    return jnp.where(whole, jnp.minimum(best, cell_lab[t]), scan_cell(best))
+                def scan_cell(b):
+                    def step(bb, u):
+                        hit = jnp.sum((pts_sorted[u] - center) ** 2) <= eps2
+                        return jnp.where(hit, jnp.minimum(bb, parent[grid.perm[u]]), bb)
+                    return cell_scan(center, grid.run_start[t], grid.run_length[t], b, step)
 
-                def on_point(best):
-                    j = grid.perm[t]
-                    hit = (jnp.sum((pts_sorted[t] - center) ** 2) <= eps2) & core[j]
-                    return jnp.where(hit, jnp.minimum(best, parent[j]), best)
+                return jnp.where(whole, jnp.minimum(best, cell_lab[t]), scan_cell(best))
 
-                best = jnp.where(
-                    skip_leaf[t], best,
-                    jnp.where(leaf_is_cell[t], on_cell(best), on_point(best)))
-                return best, jnp.bool_(False)
+            def on_point(best):
+                j = grid.perm[t]
+                hit = (jnp.sum((pts_sorted[t] - center) ** 2) <= eps2) & core[j]
+                return jnp.where(hit, jnp.minimum(best, parent[j]), best)
 
-            out = traverse_sphere_stackless(bvh, center[None], eps_f, leaf_fn, jnp.int32(n))[0]
-            return jnp.where(active, out, jnp.int32(n))
+            best = jnp.where(
+                skip_leaf[t], best,
+                jnp.where(leaf_is_cell[t], on_cell(best), on_point(best)))
+            return best, jnp.bool_(False)
 
-        m_s = jax.vmap(run)(pts_sorted, queries_mask_s)
-        return jnp.full(n, n, jnp.int32).at[grid.perm].min(jnp.where(queries_mask_s, m_s, n))
+        m_s = query(bvh, within(pts_sorted, eps_f), cb, jnp.int32(n))
+        m_s = jnp.where(queries_mask_s, m_s, jnp.int32(n))
+        return jnp.full(n, n, jnp.int32).at[grid.perm].min(m_s)
 
     # Union queries run from EVERY core point. A head-only representative
     # per dense cell under-merges: the one-directional min-label hook relies

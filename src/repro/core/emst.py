@@ -13,22 +13,26 @@ Component-aware pruning mirrors the paper's algorithm: a subtree whose
 leaf range lies entirely in the query's component is skipped — here
 detected via per-node component intervals recomputed each round (a node
 is skippable when every leaf below it has the query's root AND the node
-interval is degenerate)."""
+interval is degenerate).
+
+The traversal itself is the query engine's ordered-stack nearest core
+(``core.query.traverse_nearest_stack``, the same loop behind the
+``nearest(k)`` predicate) with a component-filtered leaf update and a
+component-interval push gate; the intervals come from the engine's
+generic bottom-up ``node_reduce``."""
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import union_find
-from repro.core.bvh import Bvh, SENTINEL, build_bvh
-from repro.core.geometry import scene_bounds, point_aabb_dist2
+from repro.core.bvh import Bvh, build_bvh
+from repro.core.geometry import scene_bounds
+from repro.core.query import node_reduce, traverse_nearest_stack
 
 __all__ = ["EmstResult", "emst"]
-
-_STACK_DEPTH = 96
 
 
 class EmstResult(NamedTuple):
@@ -41,83 +45,37 @@ class EmstResult(NamedTuple):
 def _node_component_intervals(bvh: Bvh, comp_sorted: jax.Array):
     """Per-node [min, max] component id over its leaf range; a node with
     min == max is entirely inside one component (skippable for queries from
-    that component). Computed per round with the bottom-up fixpoint."""
-    n = bvh.num_leaves
+    that component). Recomputed per round with the engine's generic
+    bottom-up reduction."""
     inf = jnp.iinfo(jnp.int32).max
-    lo0 = jnp.concatenate([jnp.full((n - 1,), inf, jnp.int32), comp_sorted])
-    hi0 = jnp.concatenate([jnp.full((n - 1,), -1, jnp.int32), comp_sorted])
-    ready0 = jnp.concatenate([jnp.zeros(n - 1, bool), jnp.ones(n, bool)])
-    ids = jnp.arange(n - 1, dtype=jnp.int32)
-
-    def cond(state):
-        return ~jnp.all(state[2])
-
-    def body(state):
-        lo, hi, ready = state
-        l, r = bvh.left_child, bvh.right_child
-        ok = ready[l] & ready[r]
-        lo = lo.at[ids].set(jnp.where(ok, jnp.minimum(lo[l], lo[r]), lo[ids]))
-        hi = hi.at[ids].set(jnp.where(ok, jnp.maximum(hi[l], hi[r]), hi[ids]))
-        ready = ready.at[ids].set(ready[ids] | ok)
-        return lo, hi, ready
-
-    lo, hi, _ = jax.lax.while_loop(cond, body, (lo0, hi0, ready0))
-    return lo, hi
+    return node_reduce(
+        bvh, (comp_sorted, comp_sorted),
+        lambda a, b: (jnp.minimum(a[0], b[0]), jnp.maximum(a[1], b[1])),
+        (jnp.int32(inf), jnp.int32(-1)))
 
 
 def _nearest_other_component(bvh: Bvh, points: jax.Array, comp: jax.Array):
     """For each point, (distance², index) of the nearest point whose
-    component differs. Stack traversal with best-so-far pruning."""
-    n = bvh.num_leaves
+    component differs: the engine's ordered-stack nearest traversal with a
+    component filter in the leaf update and a component-interval skip in
+    the push gate (best-so-far pruning comes from the carry)."""
     comp_sorted = comp[bvh.leaf_perm]
     clo, chi = _node_component_intervals(bvh, comp_sorted)
 
-    def one(center, my_comp):
-        stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
+    def push_fn(my_comp, carry, child, d2):
+        best_d, _ = carry
+        # skip: outside pruning radius, or entirely my component
+        same = (clo[child] == chi[child]) & (clo[child] == my_comp)
+        return (d2 < best_d) & ~same
 
-        def cond(state):
-            return state[0] > 0
+    def leaf_fn(my_comp, carry, obj, d2):
+        best_d, best_i = carry
+        hit = (comp[obj] != my_comp) & (d2 < best_d)
+        return jnp.where(hit, d2, best_d), jnp.where(hit, obj, best_i)
 
-        def body(state):
-            sp, stack, best_d, best_i = state
-            node = stack[sp - 1]
-            sp = sp - 1
-            is_leaf = node >= n - 1
-
-            sorted_idx = jnp.clip(node - (n - 1), 0, n - 1)
-            orig = bvh.leaf_perm[sorted_idx]
-            d_leaf = jnp.sum((points[orig] - center) ** 2)
-            hit = is_leaf & (comp[orig] != my_comp) & (d_leaf < best_d)
-            best_i = jnp.where(hit, orig, best_i)
-            best_d = jnp.where(hit, d_leaf, best_d)
-
-            node_c = jnp.clip(node, 0, n - 2)
-            l, r = bvh.left_child[node_c], bvh.right_child[node_c]
-
-            def child_push(sp, stack, child):
-                d = point_aabb_dist2(center, bvh.node_lo[child],
-                                     bvh.node_hi[child])
-                # skip: outside pruning radius, or entirely my component
-                same = (clo[child] == chi[child]) & (clo[child] == my_comp)
-                push = (~is_leaf) & (d < best_d) & ~same
-                stack = stack.at[sp].set(jnp.where(push, child, stack[sp]))
-                return sp + push.astype(jnp.int32), stack
-
-            # push far-first so the near child tightens the bound first
-            dl = point_aabb_dist2(center, bvh.node_lo[l], bvh.node_hi[l])
-            dr = point_aabb_dist2(center, bvh.node_lo[r], bvh.node_hi[r])
-            near = jnp.where(dl <= dr, l, r)
-            far = jnp.where(dl <= dr, r, l)
-            sp, stack = child_push(sp, stack, far)
-            sp, stack = child_push(sp, stack, near)
-            return sp, stack, best_d, best_i
-
-        _, _, best_d, best_i = jax.lax.while_loop(
-            cond, body, (jnp.int32(1), stack0, jnp.float32(jnp.inf),
-                         jnp.int32(-1)))
-        return best_d, best_i
-
-    return jax.vmap(one)(points, comp)
+    return traverse_nearest_stack(
+        bvh, points, comp, push_fn, leaf_fn,
+        (jnp.float32(jnp.inf), jnp.int32(-1)))
 
 
 @jax.jit

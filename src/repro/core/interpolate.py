@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.bvh import build_bvh
 from repro.core.geometry import scene_bounds
-from repro.core.knn import knn
+from repro.core.query import nearest, query
 
 __all__ = ["mls_interpolate", "wendland_c2"]
 
@@ -34,9 +34,10 @@ def mls_interpolate(source_points: jax.Array, source_values: jax.Array,
                     targets: jax.Array, k: int = 8) -> jax.Array:
     """Interpolate scalar source_values (n,) onto targets (q, d)."""
     d = source_points.shape[1]
+    assert k <= source_points.shape[0], (k, source_points.shape[0])
     lo, hi = scene_bounds(source_points)
     bvh = build_bvh(source_points, lo, hi)
-    nn = knn(bvh, source_points, targets, k)
+    nn = query(bvh, nearest(targets, k))  # the engine's kNN protocol
 
     def one(target, idx, dist):
         pts = source_points[idx]                       # (k, d)

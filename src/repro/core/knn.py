@@ -4,11 +4,11 @@
 possible candidates. [It] is more complicated to implement, and relies on a
 stack and a priority queue structures."
 
-Faithful JAX implementation: stack-based traversal with a fixed-size
-max-heap-style candidate buffer per query (the bounded priority queue);
-subtrees are pruned when their AABB distance exceeds the current k-th best.
-Children are pushed far-first so the near child is explored first (the
-classic best-first approximation that tightens the pruning bound early).
+Thin client of the unified query engine: ``knn`` is the ``nearest(k)``
+predicate dispatched through ``core.query.query`` — the ordered-stack
+traversal and the bounded priority-queue carry live inside the engine
+(``query._nearest_batched`` over ``traverse_nearest_stack``), shared with
+EMST's component-filtered nearest search and MLS interpolation support.
 """
 from __future__ import annotations
 
@@ -16,12 +16,9 @@ from functools import partial
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bvh import Bvh, SENTINEL
-from repro.core.geometry import point_aabb_dist2
-
-_STACK_DEPTH = 96
+from repro.core.bvh import Bvh
+from repro.core.query import nearest, query
 
 __all__ = ["KnnResult", "knn"]
 
@@ -31,70 +28,13 @@ class KnnResult(NamedTuple):
     distances: jax.Array  # (q, k) float32 — euclidean distances
 
 
-def _insert(dists, idxs, d, i):
-    """Insert (d, i) into the descending-replacement candidate buffer:
-    replaces the current worst if better. Buffers are kept UNSORTED; the
-    worst element is tracked by max()."""
-    worst = jnp.argmax(dists)
-    better = d < dists[worst]
-    dists = jnp.where(better, dists.at[worst].set(d), dists)
-    idxs = jnp.where(better, idxs.at[worst].set(i), idxs)
-    return dists, idxs
-
-
 @partial(jax.jit, static_argnames=("k",))
 def knn(bvh: Bvh, points: jax.Array, queries: jax.Array, k: int) -> KnnResult:
-    """k nearest points (by euclidean distance) for each query row."""
+    """k nearest points (by euclidean distance) for each query row.
+
+    ``points`` is kept in the signature for backward compatibility; the
+    engine reads leaf bounding volumes (== the points, for point trees)."""
     n = bvh.num_leaves
     assert k <= n, (k, n)
-
-    def one_query(center):
-        stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
-        d0 = jnp.full((k,), jnp.inf, jnp.float32)
-        i0 = jnp.full((k,), -1, jnp.int32)
-
-        def cond(state):
-            sp, *_ = state
-            return sp > 0
-
-        def body(state):
-            sp, stack, dists, idxs = state
-            node = stack[sp - 1]
-            sp = sp - 1
-            kth = jnp.max(dists)                      # current pruning radius²
-            is_leaf = node >= n - 1
-
-            # leaf: exact distance, try to insert
-            sorted_idx = jnp.clip(node - (n - 1), 0, n - 1)
-            orig = bvh.leaf_perm[sorted_idx]
-            d_leaf = jnp.sum((points[orig] - center) ** 2)
-            new_d, new_i = _insert(dists, idxs, d_leaf, orig)
-            dists = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), new_d, dists)
-            idxs = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), new_i, idxs)
-
-            # internal: push children (far first) if their box can beat kth
-            node_c = jnp.clip(node, 0, n - 2)
-            left = bvh.left_child[node_c]
-            right = bvh.right_child[node_c]
-            dl = point_aabb_dist2(center, bvh.node_lo[left], bvh.node_hi[left])
-            dr = point_aabb_dist2(center, bvh.node_lo[right], bvh.node_hi[right])
-            near = jnp.where(dl <= dr, left, right)
-            far = jnp.where(dl <= dr, right, left)
-            d_near = jnp.minimum(dl, dr)
-            d_far = jnp.maximum(dl, dr)
-
-            push_far = (~is_leaf) & (d_far < kth)
-            stack = stack.at[sp].set(jnp.where(push_far, far, stack[sp]))
-            sp = sp + push_far.astype(jnp.int32)
-            push_near = (~is_leaf) & (d_near < kth)
-            stack = stack.at[sp].set(jnp.where(push_near, near, stack[sp]))
-            sp = sp + push_near.astype(jnp.int32)
-            return sp, stack, dists, idxs
-
-        _, _, dists, idxs = jax.lax.while_loop(
-            cond, body, (jnp.int32(1), stack0, d0, i0))
-        order = jnp.argsort(dists)
-        return KnnResult(indices=idxs[order],
-                         distances=jnp.sqrt(dists[order]))
-
-    return jax.vmap(one_query)(queries)
+    res = query(bvh, nearest(queries, k))
+    return KnnResult(indices=res.indices, distances=res.distances)

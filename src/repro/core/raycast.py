@@ -1,20 +1,19 @@
 """Basic ray casting (paper §3.2: "ArborX provides basic support for ray
-tracing"): nearest AABB hit per ray via ordered stack traversal.
+tracing"): nearest AABB hit per ray, as a thin client of the unified query
+engine — the ``ray`` predicate dispatched through ``core.query.query``
+(slab-method intersection + ordered stack traversal pruning by the current
+best entry t, all inside the engine).
 
 Leaves are boxed objects (build the BVH with `build_bvh_objects`); returns
-the nearest-entry leaf for each ray (index + t), or (-1, inf) on miss.
-Slab-method ray/AABB intersection; traversal prunes nodes whose entry t
-exceeds the current best."""
+the nearest-entry leaf for each ray (index + t), or (-1, inf) on miss."""
 from __future__ import annotations
 
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bvh import Bvh, SENTINEL
-
-_STACK_DEPTH = 96
+from repro.core.bvh import Bvh
+from repro.core.query import query, ray as _ray
 
 __all__ = ["RayHits", "raycast"]
 
@@ -24,57 +23,8 @@ class RayHits(NamedTuple):
     t: jax.Array       # (r,) float32 — entry parameter along the ray
 
 
-def _ray_box(origin, inv_dir, lo, hi):
-    """Slab test. Returns (t_entry, hit) with t_entry >= 0."""
-    t0 = (lo - origin) * inv_dir
-    t1 = (hi - origin) * inv_dir
-    tmin = jnp.max(jnp.minimum(t0, t1))
-    tmax = jnp.min(jnp.maximum(t0, t1))
-    hit = (tmax >= jnp.maximum(tmin, 0.0))
-    return jnp.maximum(tmin, 0.0), hit
-
-
 @jax.jit
 def raycast(bvh: Bvh, origins: jax.Array, directions: jax.Array) -> RayHits:
     """Nearest hit for each ray. origins/directions: (r, d)."""
-    n = bvh.num_leaves
-
-    def one(origin, direction):
-        inv = 1.0 / jnp.where(jnp.abs(direction) < 1e-12,
-                              jnp.sign(direction) * 1e-12 + 1e-12, direction)
-        stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
-
-        def cond(state):
-            return state[0] > 0
-
-        def body(state):
-            sp, stack, best_t, best_i = state
-            node = stack[sp - 1]
-            sp = sp - 1
-            is_leaf = node >= n - 1
-            t_in, hit = _ray_box(origin, inv, bvh.node_lo[node],
-                                 bvh.node_hi[node])
-            closer = hit & (t_in < best_t)
-
-            sorted_idx = jnp.clip(node - (n - 1), 0, n - 1)
-            orig = bvh.leaf_perm[sorted_idx]
-            take = is_leaf & closer
-            best_i = jnp.where(take, orig, best_i)
-            best_t = jnp.where(take, t_in, best_t)
-
-            node_c = jnp.clip(node, 0, n - 2)
-            for child in (bvh.right_child[node_c], bvh.left_child[node_c]):
-                tc, hc = _ray_box(origin, inv, bvh.node_lo[child],
-                                  bvh.node_hi[child])
-                push = (~is_leaf) & closer & hc & (tc < best_t)
-                stack = stack.at[sp].set(jnp.where(push, child, stack[sp]))
-                sp = sp + push.astype(jnp.int32)
-            return sp, stack, best_t, best_i
-
-        _, _, best_t, best_i = jax.lax.while_loop(
-            cond, body, (jnp.int32(1), stack0, jnp.float32(jnp.inf),
-                         jnp.int32(-1)))
-        return best_i, best_t
-
-    idx, t = jax.vmap(one)(origins, directions)
-    return RayHits(index=idx, t=t)
+    res = query(bvh, _ray(origins, directions))
+    return RayHits(index=res.index, t=res.t)

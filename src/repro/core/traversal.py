@@ -1,35 +1,34 @@
-"""BVH traversals (paper §4.1–4.2) in pure JAX.
+"""Legacy traversal entry points — thin shims over the unified query
+engine in ``core/query.py``.
 
-Three faithful reproductions of ArborX's traversal machinery:
+The engine (paper §4.1) owns every BVH walk in this repo: predicate
+constructors (``within`` / ``intersects_box`` / ``nearest`` / ``ray``),
+the ``stackless`` / ``stack`` / ``pair`` backends, fused callbacks with
+early exit, CSR output protocols, and Morton query sorting. New code
+should call ``repro.core.query.query`` (or the protocol helpers
+``query_count`` / ``query_csr`` / ``query_csr_buffered``) directly;
+these three functions keep the original pre-engine signatures alive for
+existing callers and tests.
 
-* **Stackless rope traversal** (§4.2.1, Torres et al. 2009): each query walks
-  ``node -> left_child`` on hit and ``node -> rope`` on miss/leaf, with no
-  per-query stack. On GPU this raises occupancy; here it means the vmapped
-  while-loop carries a single int32 of traversal state per query.
-* **Stack traversal** — the pre-(4) baseline from the Fig. 4 timeline, kept
-  for the benchmark ladder. Carries a fixed 96-deep stack per query.
-* **Pair traversal** (§4.2.3): query k starts at ``rope[leaf_k]`` instead of
-  the root, so it visits exactly the leaves *after* k in Morton order —
-  each unordered pair is processed once.
-
-Callbacks (§4.1.1) are JAX closures ``leaf_fn(carry, obj_idx) -> (carry,
-done)`` fused into the traversal loop; ``done=True`` reproduces the
-early-termination interface (§4.1.2, ``CallbackTreeTraversalControl``).
-
-All functions are jit/vmap-compatible; queries are vectorized with ``vmap``
-(the analogue of one GPU thread per query, pre-sorted by the BVH's own Morton
-order to reduce divergence, as ArborX does).
+Shim contract (unchanged from the original module): ``leaf_fn(carry,
+original_point_idx, sorted_idx) -> (carry, done)`` runs fused on EVERY
+reached leaf (exact filtering is the callback's job — the engine's
+predicate-gated callback protocol is the new-style alternative), ``eps``
+may be a traced scalar (including one batched by an outer ``vmap`` for
+per-query radii), and results are bit-identical to the pre-engine
+implementations: the engine's generic cores are the very same loops,
+with the node test made carry-aware.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bvh import Bvh, SENTINEL
+from repro.core.bvh import Bvh
 from repro.core.geometry import point_aabb_dist2
+from repro.core.query import traverse
 
 __all__ = [
     "traverse_sphere_stackless",
@@ -37,162 +36,78 @@ __all__ = [
     "pair_traverse_sphere",
 ]
 
-_STACK_DEPTH = 96  # >= max tree depth: 64 code bits + 32 index tie-break bits
+
+def _sphere_qdata(bvh: Bvh, centers, eps):
+    eps_q = jnp.broadcast_to(jnp.asarray(eps, centers.dtype),
+                             (centers.shape[0],))
+    return (centers, eps_q ** 2)
 
 
-def _sphere_hit(bvh: Bvh, node: jax.Array, center: jax.Array, eps2: jax.Array) -> jax.Array:
-    return point_aabb_dist2(center, bvh.node_lo[node], bvh.node_hi[node]) <= eps2
+def _sphere_node_fn(bvh: Bvh):
+    def node_fn(q, carry, node):
+        center, eps2 = q
+        return point_aabb_dist2(center, bvh.node_lo[node],
+                                bvh.node_hi[node]) <= eps2
+    return node_fn
+
+
+def _ungated(leaf_fn: Callable):
+    def fn(q, carry, obj, sorted_idx):
+        return leaf_fn(carry, obj, sorted_idx)
+    return fn
 
 
 def traverse_sphere_stackless(
     bvh: Bvh,
     centers: jax.Array,            # (q, d) query sphere centers
-    eps: jax.Array,
+    eps,
     leaf_fn: Callable,             # (carry, original_point_idx, sorted_idx) -> (carry, done)
     carry_init,                    # pytree, broadcast per query
     start_nodes: jax.Array | None = None,  # (q,) node ids; default root
 ):
-    """Rope-based stackless traversal, vmapped over queries.
-
-    ``eps`` may be a traced scalar — including one batched by an outer
-    ``vmap`` (per-query radii, e.g. spherical-overdensity searches where
-    every halo probes its own R_Δ candidate; see ``halos/so_mass.py``)."""
-    n = bvh.num_leaves
-    eps2 = jnp.asarray(eps, centers.dtype) ** 2
-    root = jnp.int32(0)  # internal node 0 is the root (n >= 2)
-
-    def one_query(center, start, carry0):
-        def cond(state):
-            node, _, done = state
-            return (node != SENTINEL) & ~done
-
-        def body(state):
-            node, carry, done = state
-            is_leaf = node >= n - 1
-            sorted_idx = node - (n - 1)
-            # Leaf: run callback (fused, §4.1.1), continue at rope.
-            carry_leaf, done_leaf = leaf_fn(carry, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)], sorted_idx)
-            next_leaf = bvh.rope[node]
-
-            # Internal: descend on hit, rope on miss.
-            hit = _sphere_hit(bvh, node, center, eps2)
-            node_c = jnp.clip(node, 0, n - 2)
-            next_internal = jnp.where(hit, bvh.left_child[node_c], bvh.rope[node])
-
-            carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
-            done = jnp.where(is_leaf, done | done_leaf, done)
-            node = jnp.where(is_leaf, next_leaf, next_internal)
-            return node, carry, done
-
-        _, carry, _ = jax.lax.while_loop(cond, body, (start, carry0, jnp.bool_(False)))
-        return carry
-
-    if start_nodes is None:
-        start_nodes = jnp.full((centers.shape[0],), root, jnp.int32)
-    carries = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (centers.shape[0],) + jnp.shape(x)), carry_init
-    )
-    return jax.vmap(one_query)(centers, start_nodes, carries)
+    """Rope-based stackless traversal (§4.2.1), vmapped over queries."""
+    return traverse(bvh, _sphere_qdata(bvh, centers, eps),
+                    _sphere_node_fn(bvh), _ungated(leaf_fn), carry_init,
+                    backend="stackless", start_nodes=start_nodes)
 
 
 def traverse_sphere_stack(
     bvh: Bvh,
     centers: jax.Array,
-    eps: jax.Array,
+    eps,
     leaf_fn: Callable,
     carry_init,
 ):
     """Classic stack-based traversal (the Fig. 4 pre-stackless baseline)."""
-    n = bvh.num_leaves
-    eps2 = jnp.asarray(eps, centers.dtype) ** 2
-
-    def one_query(center, carry0):
-        stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
-
-        def cond(state):
-            sp, _, _, done = state
-            return (sp > 0) & ~done
-
-        def body(state):
-            sp, stack, carry, done = state
-            node = stack[sp - 1]
-            sp = sp - 1
-            is_leaf = node >= n - 1
-            sorted_idx = node - (n - 1)
-
-            carry_leaf, done_leaf = leaf_fn(carry, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)], sorted_idx)
-
-            hit = _sphere_hit(bvh, node, center, eps2) & ~is_leaf
-            node_c = jnp.clip(node, 0, n - 2)
-            # Push right then left so left pops first (matches rope order).
-            stack = stack.at[sp].set(jnp.where(hit, bvh.right_child[node_c], stack[sp]))
-            sp_r = sp + hit.astype(jnp.int32)
-            stack = stack.at[sp_r].set(jnp.where(hit, bvh.left_child[node_c], stack[sp_r]))
-            sp = sp_r + hit.astype(jnp.int32)
-
-            carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
-            done = done | (is_leaf & done_leaf)
-            return sp, stack, carry, done
-
-        _, _, carry, _ = jax.lax.while_loop(cond, body, (jnp.int32(1), stack0, carry0, jnp.bool_(False)))
-        return carry
-
-    carries = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (centers.shape[0],) + jnp.shape(x)), carry_init
-    )
-    return jax.vmap(one_query)(centers, carries)
+    return traverse(bvh, _sphere_qdata(bvh, centers, eps),
+                    _sphere_node_fn(bvh), _ungated(leaf_fn), carry_init,
+                    backend="stack")
 
 
 def pair_traverse_sphere(
     bvh: Bvh,
     points: jax.Array,             # (n, d) ORIGINAL point array the BVH indexes
-    eps: jax.Array,
+    eps,
     leaf_fn: Callable,             # (carry, i_orig, j_orig) -> (carry, done)
     carry_init,
 ):
-    """Pair traversal (§4.2.3): one query per point, starting at its own leaf's
-    rope, so only pairs (k, m) with k < m in Morton order are visited.
-
-    ``leaf_fn`` receives the ORIGINAL indices of both endpoints; distance
-    filtering is the callback's job (as in ArborX, where the predicate check
-    happens against leaf AABBs and exact tests live in the callback)."""
+    """Pair traversal (§4.2.3): one query per point, starting at its own
+    leaf's rope, so only pairs (k, m) with k < m in Morton order are
+    visited. ``leaf_fn`` receives the ORIGINAL indices of both endpoints;
+    distance filtering is the callback's job. Carries are returned in
+    SORTED query order (row k belongs to ``bvh.leaf_perm[k]``)."""
     n = bvh.num_leaves
-    sorted_ids = jnp.arange(n, dtype=jnp.int32)
-    leaf_nodes = sorted_ids + (n - 1)
-    starts = bvh.rope[leaf_nodes]
-    centers = points[bvh.leaf_perm]  # query k = sorted point k
+    centers = points[bvh.leaf_perm]
+    starts = bvh.rope[jnp.arange(n, dtype=jnp.int32) + (n - 1)]
+    qdata = ((bvh.leaf_perm,) + _sphere_qdata(bvh, centers, eps))
 
-    def wrapped_leaf_fn(query_orig_idx):
-        def fn(carry, obj_orig_idx, _sorted_idx):
-            return leaf_fn(carry, query_orig_idx, obj_orig_idx)
-        return fn
+    def node_fn(q, carry, node):
+        _, center, eps2 = q
+        return point_aabb_dist2(center, bvh.node_lo[node],
+                                bvh.node_hi[node]) <= eps2
 
-    def one_query(center, start, i_orig, carry0):
-        eps2 = jnp.asarray(eps, centers.dtype) ** 2
+    def fn(q, carry, obj, sorted_idx):
+        return leaf_fn(carry, q[0], obj)
 
-        def cond(state):
-            node, _, done = state
-            return (node != SENTINEL) & ~done
-
-        def body(state):
-            node, carry, done = state
-            is_leaf = node >= n - 1
-            sorted_idx = node - (n - 1)
-            carry_leaf, done_leaf = leaf_fn(
-                carry, i_orig, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)]
-            )
-            hit = _sphere_hit(bvh, node, center, eps2)
-            node_c = jnp.clip(node, 0, n - 2)
-            next_internal = jnp.where(hit, bvh.left_child[node_c], bvh.rope[node])
-            carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
-            done = jnp.where(is_leaf, done | done_leaf, done)
-            node = jnp.where(is_leaf, bvh.rope[node], next_internal)
-            return node, carry, done
-
-        _, carry, _ = jax.lax.while_loop(cond, body, (start, carry0, jnp.bool_(False)))
-        return carry
-
-    carries = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)), carry_init
-    )
-    return jax.vmap(one_query)(centers, starts, bvh.leaf_perm, carries)
+    return traverse(bvh, qdata, node_fn, fn, carry_init,
+                    backend="stackless", start_nodes=starts)

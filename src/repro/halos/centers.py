@@ -8,11 +8,12 @@ the standard short-range proxy: a softened potential truncated at ε,
 
     φ_i = − Σ_{j : r_ij ≤ ε}  1 / sqrt(r_ij² + soft²),
 
-evaluated with the SAME fused BVH traversal the DBSCAN ladder uses
-(``core/bvh.py`` + ``traverse_sphere_stackless`` with an accumulating
-callback, §4.1.1) — each particle's potential is one ε-query, no
-neighbor lists materialized. The self term 1/soft is a constant shift and
-cannot change the per-halo argmin.
+evaluated with the SAME fused query engine the DBSCAN ladder uses
+(``core/query.py``: a ``within`` predicate + accumulating callback,
+§4.1.1, which receives the squared pair distance from the predicate
+gate) — each particle's potential is one ε-query, no neighbor lists
+materialized. The self term 1/soft is a constant shift and cannot change
+the per-halo argmin.
 
 The per-halo argmin is two segmented scatter-mins over the catalog's
 particle→slot map: min potential, then min particle index attaining it
@@ -28,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core.bvh import Bvh, build_bvh
 from repro.core.geometry import scene_bounds
-from repro.core.traversal import traverse_sphere_stackless
+from repro.core.query import query, within
 
 _BIG = jnp.float32(1e30)
 
@@ -54,25 +55,18 @@ def halo_potentials(points: jax.Array, eps, *, softening=None,
     eps_f = jnp.asarray(eps, jnp.float32)
     soft2 = jnp.square(eps_f * 1e-2 if softening is None
                        else jnp.asarray(softening, jnp.float32))
-    eps2 = eps_f ** 2
     if bvh is None:
         lo, hi = scene_bounds(points)
         bvh = build_bvh(points, lo, hi, use_64bit=use_64bit)
     if active is None:
         active = jnp.ones((points.shape[0],), bool)
 
-    def run(center, is_active):
-        def fn(acc, j, _sorted):
-            r2 = jnp.sum((points[j] - center) ** 2)
-            hit = r2 <= eps2
-            contrib = jnp.where(hit, jax.lax.rsqrt(r2 + soft2), 0.0)
-            return acc - contrib, jnp.bool_(False)
+    def fn(acc, _qi, _j, r2):
+        return acc - jax.lax.rsqrt(r2 + soft2), jnp.bool_(False)
 
-        out = traverse_sphere_stackless(bvh, center[None], eps_f, fn,
-                                        jnp.float32(0.0))[0]
-        return jnp.where(is_active, out, 0.0)
-
-    return jax.vmap(run)(points.astype(jnp.float32), active)
+    out = query(bvh, within(points.astype(jnp.float32), eps_f), fn,
+                jnp.float32(0.0))
+    return jnp.where(active, out, 0.0)
 
 
 @partial(jax.jit, static_argnames=("capacity", "use_64bit"))

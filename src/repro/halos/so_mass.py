@@ -7,11 +7,12 @@ the mean enclosed density crosses Δ × the reference density, and report
     M_Δ = (particles inside R_Δ) × particle_mass.
 
 Enclosed counts are ε-sphere range counts on the SAME BVH the clustering
-uses — ``sphere_counts`` vmaps ``traverse_sphere_stackless`` with a
-PER-QUERY radius (each halo probes its own candidate R via the batched
-radius lane). R_Δ is located by fixed-iteration bisection (jit-able, fixed
-shapes): enclosed mean density is monotonically decreasing outside the
-core, so ``iters`` halvings bracket R_Δ to ``r_hi / 2^iters``.
+uses — ``sphere_counts`` is the query engine's count protocol with a
+PER-QUERY radius (``within(centers, radii)``: each halo probes its own
+candidate R via the predicate's radius lane). R_Δ is located by
+fixed-iteration bisection (jit-able, fixed shapes): enclosed mean density
+is monotonically decreasing outside the core, so ``iters`` halvings
+bracket R_Δ to ``r_hi / 2^iters``.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.bvh import Bvh, build_bvh
 from repro.core.geometry import scene_bounds
-from repro.core.traversal import traverse_sphere_stackless
+from repro.core.query import query_count, within
 
 __all__ = ["SoMassResult", "sphere_counts", "so_masses"]
 
@@ -41,22 +42,14 @@ class SoMassResult(NamedTuple):
 
 def sphere_counts(bvh, points: jax.Array, centers: jax.Array,
                   radii: jax.Array) -> jax.Array:
-    """Range counts with a per-query radius vector (radii: scalar or (q,))."""
-    pts = points.astype(jnp.float32)
-    radii = jnp.broadcast_to(jnp.asarray(radii, jnp.float32),
-                             (centers.shape[0],))
-    r2 = radii ** 2
+    """Range counts with a per-query radius vector (radii: scalar or (q,)).
 
-    def run(center, radius, rr2):
-        def fn(cnt, j, _sorted):
-            hit = jnp.sum((pts[j] - center) ** 2) <= rr2
-            return cnt + hit.astype(jnp.int32), jnp.bool_(False)
-
-        return traverse_sphere_stackless(bvh, center[None], radius, fn,
-                                         jnp.int32(0))[0]
-
-    # vmap over queries with per-query radius — one traversal per halo.
-    return jax.vmap(run)(centers.astype(jnp.float32), radii, r2)
+    One engine call: ``within`` predicates carry the per-halo radii, the
+    count protocol does the rest. ``points`` is kept in the signature for
+    backward compatibility (the engine tests leaf volumes directly)."""
+    return query_count(
+        bvh, within(centers.astype(jnp.float32),
+                    jnp.asarray(radii, jnp.float32)))
 
 
 @partial(jax.jit, static_argnames=("iters", "use_64bit"))

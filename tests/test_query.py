@@ -1,0 +1,250 @@
+"""Unified query engine (core/query.py): backend equivalence on adversarial
+inputs, CSR output protocols vs numpy oracles, overflow-retry, predicate
+surface, and engine-level Morton query sorting."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bvh import build_bvh
+from repro.core.query import (
+    intersects_box,
+    nearest,
+    query,
+    query_count,
+    query_csr,
+    query_csr_buffered,
+    query_fixed,
+    within,
+)
+
+
+def _bvh(pts):
+    lo = pts.min(0) - 1e-4
+    hi = pts.max(0) + 1e-4
+    return build_bvh(jnp.asarray(pts), jnp.asarray(lo), jnp.asarray(hi))
+
+
+def _d2(pts, queries):
+    return ((queries[:, None] - pts[None]) ** 2).sum(-1, dtype=np.float32)
+
+
+# --- adversarial datasets (degenerate Morton codes, ties, minimal n) --------
+
+def _adversarial(name):
+    rng = np.random.default_rng(42)
+    if name == "duplicates":
+        return np.broadcast_to(np.float32([0.3, 0.7, 0.5]), (16, 3)).copy()
+    if name == "collinear":
+        t = np.linspace(0, 1, 33, dtype=np.float32)
+        return np.stack([t, 2 * t, -t], 1)
+    if name == "n2":
+        return rng.uniform(0, 1, (2, 3)).astype(np.float32)
+    if name == "random":
+        return rng.uniform(0, 1, (64, 3)).astype(np.float32)
+    raise KeyError(name)
+
+
+ADVERSARIAL = ["duplicates", "collinear", "n2", "random"]
+
+
+@pytest.mark.parametrize("dataset", ADVERSARIAL)
+@pytest.mark.parametrize("eps", [0.0, 0.25])
+def test_counts_backends_match_bruteforce(dataset, eps):
+    """stackless == stack == numpy brute force, including eps=0 (only exact
+    coincidences count) and all-duplicate / collinear / n=2 point sets."""
+    pts = _adversarial(dataset)
+    bvh = _bvh(pts)
+    want = (_d2(pts, pts) <= np.float32(eps) ** 2).sum(1)
+    for backend in ("stackless", "stack"):
+        got = np.asarray(query_count(bvh, within(jnp.asarray(pts), eps),
+                                     backend=backend))
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+@pytest.mark.parametrize("dataset", ADVERSARIAL)
+def test_csr_backends_match_bruteforce(dataset):
+    """CSR neighbor lists agree across backends and with the numpy oracle
+    (as sets per row — traversal order differs by design)."""
+    pts = _adversarial(dataset)
+    bvh = _bvh(pts)
+    eps = 0.3
+    adj = _d2(pts, pts) <= np.float32(eps) ** 2
+    per_backend = {}
+    for backend in ("stackless", "stack"):
+        offs, idx = query_csr(bvh, within(jnp.asarray(pts), eps),
+                              backend=backend)
+        offs, idx = np.asarray(offs), np.asarray(idx)
+        np.testing.assert_array_equal(np.diff(offs), adj.sum(1))
+        rows = [frozenset(idx[offs[i]:offs[i + 1]].tolist())
+                for i in range(len(pts))]
+        for i, row in enumerate(rows):
+            assert row == frozenset(np.nonzero(adj[i])[0].tolist()), (backend, i)
+        per_backend[backend] = rows
+    assert per_backend["stackless"] == per_backend["stack"]
+
+
+@pytest.mark.parametrize("dataset", ADVERSARIAL)
+def test_knn_matches_bruteforce_adversarial(dataset):
+    pts = _adversarial(dataset)
+    k = min(3, len(pts))
+    bvh = _bvh(pts)
+    res = query(bvh, nearest(jnp.asarray(pts), k))
+    want = np.sort(np.sqrt(_d2(pts, pts)), axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(res.distances), want, atol=1e-5)
+
+
+@given(n=st.integers(2, 60), eps=st.floats(0.0, 0.5), seed=st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_count_property_backends_agree(n, eps, seed):
+    pts = np.random.default_rng(seed).uniform(0, 1, (n, 3)).astype(np.float32)
+    bvh = _bvh(pts)
+    want = (_d2(pts, pts) <= np.float32(eps) ** 2).sum(1)
+    for backend in ("stackless", "stack"):
+        got = np.asarray(query_count(bvh, within(jnp.asarray(pts), eps),
+                                     backend=backend))
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+# --- output protocols --------------------------------------------------------
+
+def test_buffered_csr_overflow_retry():
+    """Force an undersized first buffer: capacity=1 on a clustered set whose
+    neighborhoods hold dozens of points — the single-pass protocol must
+    detect overflow, double, and converge to the two-pass result."""
+    rng = np.random.default_rng(11)
+    pts = (rng.uniform(0, 0.05, (80, 3)) +
+           np.float32([0.5, 0.5, 0.5])).astype(np.float32)  # one dense blob
+    bvh = _bvh(pts)
+    pred = within(jnp.asarray(pts), 0.2)
+
+    _, counts, overflowed = query_fixed(bvh, pred, capacity=1)
+    assert bool(overflowed) and int(jnp.max(counts)) > 1  # the trap is armed
+
+    offs_b, idx_b = query_csr_buffered(bvh, pred, capacity=1)
+    offs_t, idx_t = query_csr(bvh, pred)
+    np.testing.assert_array_equal(np.asarray(offs_b), np.asarray(offs_t))
+    np.testing.assert_array_equal(np.asarray(idx_b), np.asarray(idx_t))
+
+
+def test_query_fixed_reports_true_counts():
+    pts = _adversarial("duplicates")
+    bvh = _bvh(pts)
+    buf, counts, overflowed = query_fixed(bvh, within(jnp.asarray(pts), 0.1),
+                                          capacity=4)
+    assert bool(overflowed)
+    np.testing.assert_array_equal(np.asarray(counts), 16)  # true, not clamped
+    assert buf.shape == (16, 4)
+
+
+def test_count_early_termination_saturates():
+    pts = _adversarial("duplicates")
+    bvh = _bvh(pts)
+    got = np.asarray(query_count(bvh, within(jnp.asarray(pts), 0.1), stop_at=5))
+    np.testing.assert_array_equal(got, 5)
+
+
+# --- predicate surface -------------------------------------------------------
+
+def test_intersects_box_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 1, (100, 3)).astype(np.float32)
+    qlo = rng.uniform(0, 0.8, (20, 3)).astype(np.float32)
+    qhi = qlo + rng.uniform(0.05, 0.3, (20, 3)).astype(np.float32)
+    bvh = _bvh(pts)
+    got = np.asarray(query_count(
+        bvh, intersects_box(jnp.asarray(qlo), jnp.asarray(qhi))))
+    want = ((pts[None] >= qlo[:, None]) & (pts[None] <= qhi[:, None])) \
+        .all(-1).sum(1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_per_query_radii():
+    """within() with a per-query radius vector (the SO-mass use case)."""
+    rng = np.random.default_rng(5)
+    pts = rng.uniform(0, 1, (80, 3)).astype(np.float32)
+    radii = rng.uniform(0.0, 0.4, (80,)).astype(np.float32)
+    bvh = _bvh(pts)
+    got = np.asarray(query_count(bvh, within(jnp.asarray(pts),
+                                             jnp.asarray(radii))))
+    want = (_d2(pts, pts) <= radii[:, None] ** 2).sum(1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pair_backend_counts_each_pair_once():
+    rng = np.random.default_rng(9)
+    pts = rng.uniform(0, 1, (50, 3)).astype(np.float32)
+    bvh = _bvh(pts)
+    eps = 0.35
+
+    def cb(c, i, j, d2):
+        return c + 1, jnp.bool_(False)
+
+    per_q = np.asarray(query(bvh, within(jnp.asarray(pts), eps), cb,
+                             jnp.int32(0), backend="pair"))
+    adj = _d2(pts, pts) <= np.float32(eps) ** 2
+    assert per_q.sum() == (adj.sum() - len(pts)) // 2
+
+
+def test_callback_early_exit():
+    """§4.1.2: traversal stops once the callback reports done."""
+    pts = _adversarial("duplicates")
+    bvh = _bvh(pts)
+    cap = 3
+
+    def cb(c, qi, j, d2):
+        c = c + 1
+        return c, c >= cap
+
+    got = np.asarray(query(bvh, within(jnp.asarray(pts), 1.0), cb, jnp.int32(0)))
+    np.testing.assert_array_equal(got, cap)
+
+
+# --- engine-level Morton query sorting (§4.2.2) ------------------------------
+
+@pytest.mark.parametrize("protocol", ["count", "csr", "nearest"])
+def test_sort_queries_is_transparent(protocol):
+    """sort_queries permutes traversal order only: outputs are positionally
+    identical to the unsorted run for every protocol."""
+    rng = np.random.default_rng(17)
+    pts = rng.uniform(0, 1, (90, 3)).astype(np.float32)
+    queries = rng.uniform(-0.2, 1.2, (40, 3)).astype(np.float32)  # some outside
+    bvh = _bvh(pts)
+    if protocol == "count":
+        a = query_count(bvh, within(jnp.asarray(queries), 0.3))
+        b = query_count(bvh, within(jnp.asarray(queries), 0.3), sort_queries=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    elif protocol == "csr":
+        offs_a, idx_a = query_csr(bvh, within(jnp.asarray(queries), 0.3))
+        offs_b, idx_b = query_csr(bvh, within(jnp.asarray(queries), 0.3),
+                                  sort_queries=True)
+        np.testing.assert_array_equal(np.asarray(offs_a), np.asarray(offs_b))
+        offs_a = np.asarray(offs_a)
+        idx_a, idx_b = np.asarray(idx_a), np.asarray(idx_b)
+        for i in range(len(queries)):
+            assert (set(idx_a[offs_a[i]:offs_a[i + 1]]) ==
+                    set(idx_b[offs_a[i]:offs_a[i + 1]])), i
+    else:
+        a = query(bvh, nearest(jnp.asarray(queries), 4))
+        b = query(bvh, nearest(jnp.asarray(queries), 4), sort_queries=True)
+        np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+        np.testing.assert_allclose(np.asarray(a.distances),
+                                   np.asarray(b.distances), atol=1e-6)
+
+
+def test_nearest_callback_protocol():
+    """Nearest + callback: invoked per result in ascending-distance order."""
+    rng = np.random.default_rng(23)
+    pts = rng.uniform(0, 1, (40, 3)).astype(np.float32)
+    bvh = _bvh(pts)
+    k = 5
+
+    def cb(carry, qi, j, dist):  # sum of the k best distances
+        return carry + dist, jnp.bool_(False)
+
+    got = np.asarray(query(bvh, nearest(jnp.asarray(pts), k), cb,
+                           jnp.float32(0.0)))
+    want = np.sort(np.sqrt(_d2(pts, pts)), axis=1)[:, :k].sum(1)
+    np.testing.assert_allclose(got, want, atol=1e-4)
