@@ -1,0 +1,100 @@
+"""Benchmark regression gate (the ReFrame pattern: measured value vs. a
+stored reference with a tolerance band, fail the run on violation).
+
+Compares the ``BENCH_*.json`` artifacts the suites emit against committed
+baselines in ``benchmarks/baselines/`` and FAILS (exit 1) when any timing
+regresses by more than ``--tolerance`` (default 20%). Non-timing entries
+(host-sync counts, staging words) are checked for exact equality — they are
+part of the protocol contract, not noise.
+
+  PYTHONPATH=src python -m benchmarks.compare BENCH_query.json ...
+  PYTHONPATH=src python -m benchmarks.compare --update BENCH_*.json
+
+``--update`` rewrites the baselines from the current artifacts (run it on the
+reference machine after an intended perf change). Artifacts with no baseline
+yet are reported and skipped (or adopted under ``--update``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINES = pathlib.Path(__file__).resolve().parent / "baselines"
+
+
+def _timings(tree: dict) -> dict:
+    """name -> seconds for every entry carrying a ``seconds`` field."""
+    return {name: rec["seconds"] for name, rec in tree.items()
+            if isinstance(rec, dict) and isinstance(rec.get("seconds"),
+                                                    (int, float))}
+
+
+def _contracts(tree: dict) -> dict:
+    """Entries with no timing: exact-match protocol facts."""
+    return {name: rec for name, rec in tree.items()
+            if not (isinstance(rec, dict) and "seconds" in rec)}
+
+
+def compare_artifact(artifact: pathlib.Path, baseline: pathlib.Path,
+                     tolerance: float) -> list[str]:
+    cur = json.loads(artifact.read_text())
+    base = json.loads(baseline.read_text())
+    problems = []
+    base_t, cur_t = _timings(base), _timings(cur)
+    for name, ref in sorted(base_t.items()):
+        if name not in cur_t:
+            problems.append(f"{name}: present in baseline, missing from run")
+            continue
+        got = cur_t[name]
+        if ref > 0 and got > ref * (1.0 + tolerance):
+            problems.append(f"{name}: {got * 1e6:.0f}us vs baseline "
+                            f"{ref * 1e6:.0f}us (+{(got / ref - 1) * 100:.0f}%"
+                            f" > +{tolerance * 100:.0f}%)")
+    for name, ref in sorted(_contracts(base).items()):
+        got = _contracts(cur).get(name)
+        if got != ref:
+            problems.append(f"{name}: contract changed {ref!r} -> {got!r}")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional slowdown before failing")
+    ap.add_argument("--baselines", default=str(BASELINES))
+    ap.add_argument("--update", action="store_true",
+                    help="adopt the current artifacts as the new baselines")
+    args = ap.parse_args(argv)
+
+    bdir = pathlib.Path(args.baselines)
+    failed = False
+    for art in map(pathlib.Path, args.artifacts):
+        if not art.exists():
+            print(f"MISSING artifact {art}")
+            failed = True
+            continue
+        ref = bdir / art.name
+        if args.update:
+            bdir.mkdir(parents=True, exist_ok=True)
+            ref.write_text(art.read_text())
+            print(f"updated baseline {ref}")
+            continue
+        if not ref.exists():
+            print(f"no baseline for {art.name} (run with --update to adopt)")
+            continue
+        problems = compare_artifact(art, ref, args.tolerance)
+        for p in problems:
+            print(f"REGRESSION {art.name}: {p}")
+        if problems:
+            failed = True
+        else:
+            print(f"ok {art.name}: {len(_timings(json.loads(art.read_text())))}"
+                  f" timings within +{args.tolerance * 100:.0f}%")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

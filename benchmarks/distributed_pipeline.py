@@ -1,0 +1,138 @@
+"""Sharded-pipeline benchmark: the end-to-end on-device query path.
+
+Times the three layers of the device-resident multi-shard stack on simulated
+host devices (run in a SUBPROCESS so ``--xla_force_host_platform_device_count``
+is set before jax initializes):
+
+  * ``sharded_neighbor_csr`` — build → ghost exchange → device CSR,
+  * ``dbscan_distributed``   — + engine-traversal DBSCAN fixpoint,
+  * ``halo_pipeline_sharded`` — + catalog merge (the full fused region).
+
+Alongside wall times it records what the device-resident protocol buys:
+
+  * host syncs per CSR query: two-pass = 1 (the sizing ``int()``), buffered =
+    measured retry attempts, device-resident = 0;
+  * CSR staging memory on a SKEWED neighborhood distribution (one query
+    matching everything): the dense staging a (q × max_count) gather would
+    need vs. the device protocol's ``capacity + (q+1) + q·chunk`` words.
+
+Emits CSV lines plus a ``BENCH_distributed.json`` artifact.
+
+  PYTHONPATH=src python -m benchmarks.distributed_pipeline [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+_CHILD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    try:  # axis_types only exists on newer JAX
+        mesh = jax.make_mesh(({ndev},), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except (AttributeError, TypeError):
+        mesh = jax.make_mesh(({ndev},), ("data",))
+
+    from benchmarks.common import benchmark_points, timeit
+    from repro.core.distributed import (dbscan_distributed, slab_partition,
+                                        sharded_neighbor_csr)
+    from repro.halos import halo_pipeline_sharded
+
+    n = {n}
+    pts, eps = benchmark_points(n)
+    pts, _ = slab_partition(pts, {ndev})
+    jp = jnp.asarray(pts)
+    vel = jnp.asarray(np.random.default_rng(1)
+                      .standard_normal((n, 3)).astype(np.float32))
+
+    out = {{}}
+    t = timeit(lambda: sharded_neighbor_csr(
+        jp, eps, capacity=32 * n, mesh=mesh, halo_cap=n).indices, iters=2)
+    out["neighbor_csr"] = t
+    t = timeit(lambda: dbscan_distributed(
+        jp, eps, 2, mesh=mesh, halo_cap=n).labels, iters=2)
+    out["dbscan"] = t
+    t = timeit(lambda: halo_pipeline_sharded(
+        jp, vel, eps, 2, mesh=mesh, capacity=n, halo_cap=n,
+        min_count=2).labels, iters=2)
+    out["pipeline"] = t
+
+    # buffered-protocol retry count on the same local problem (the only
+    # protocol whose host-sync count is data-dependent).
+    from repro.core.bvh import build_bvh
+    from repro.core.geometry import scene_bounds
+    from repro.core.query import query_csr_buffered, within
+    lo, hi = scene_bounds(jp)
+    bvh = build_bvh(jp, lo, hi)
+    buf = query_csr_buffered(bvh, within(jp, eps), capacity=8)
+    out["buffered_attempts"] = int(buf.attempts)
+    print("JSON:" + json.dumps(out))
+""")
+
+
+def _staging_words(q: int, max_count: int, capacity: int, chunk: int) -> dict:
+    """Analytic CSR staging footprint (int32 words) for a q-query batch."""
+    return {
+        "dense_gather": q * max_count,
+        "device_csr": capacity + (q + 1) + q * chunk,
+    }
+
+
+def main(fast: bool = False, out_path: str = "BENCH_distributed.json") -> None:
+    from benchmarks.common import emit
+
+    ndev = 2 if fast else 4
+    n = 256 if fast else 1024
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(pathlib.Path(__file__).resolve().parent.parent / "src"),
+         str(pathlib.Path(__file__).resolve().parent.parent),
+         env.get("PYTHONPATH", "")])
+    env.pop("XLA_FLAGS", None)
+    code = _CHILD.format(ndev=ndev, n=n)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    child = json.loads(proc.stdout.strip().rsplit("JSON:", 1)[1])
+
+    results: dict = {}
+    for stage in ("neighbor_csr", "dbscan", "pipeline"):
+        t = child[stage]
+        name = f"distributed/{stage}_n{n}_s{ndev}"
+        emit(name, t, derived=f"shards={ndev};points_per_s={n / max(t, 1e-12):.0f}")
+        results[name] = {"seconds": t, "n": n, "shards": ndev, "stage": stage}
+
+    # host syncs per CSR query, by output protocol
+    syncs = {"two_pass": 1, "buffered": child["buffered_attempts"], "device": 0}
+    for proto, k in syncs.items():
+        emit(f"distributed/host_syncs_{proto}", 0.0, derived=f"syncs={k}")
+    results["distributed/host_syncs"] = syncs
+
+    # skewed vs uniform staging memory (words), q = n queries
+    cap, chunk = 32 * n, 32
+    skew = _staging_words(q=n, max_count=n, capacity=cap, chunk=chunk)
+    unif = _staging_words(q=n, max_count=64, capacity=cap, chunk=chunk)
+    for label, w in (("skewed", skew), ("uniform", unif)):
+        emit(f"distributed/staging_{label}", 0.0,
+             derived=f"dense_words={w['dense_gather']};"
+                     f"device_words={w['device_csr']}")
+    results["distributed/staging_words"] = {"skewed": skew, "uniform": unif}
+
+    pathlib.Path(out_path).write_text(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=args.fast)

@@ -4,10 +4,12 @@ Times the unified engine (core/query.py) on the paper's benchmark problem
 so the cost of each output protocol is tracked per backend:
 
   protocols: fused-callback count (the §4.1.1 baseline: no storage),
-             two-pass count-then-fill CSR (§4.1),
+             two-pass count-then-fill CSR (§4.1; one sizing host sync),
+             device-resident scan-then-scatter CSR (fixed capacity,
+             zero host syncs — the ArborX 2.0 contract),
              single-pass buffered CSR (the §4.1 buffer optimization —
              timed with a capacity that holds, i.e. the zero-retry
-             common case) — CSR numbers include their host syncs,
+             common case),
   backends:  stackless (rope) and stack traversal, plus the pair
              backend's fused count for the self-join workloads.
 
@@ -29,7 +31,7 @@ from benchmarks.common import benchmark_points, emit, timeit
 from repro.core.bvh import build_bvh
 from repro.core.geometry import scene_bounds
 from repro.core.query import (query, query_count, query_csr,
-                              query_csr_buffered, within)
+                              query_csr_buffered, query_csr_device, within)
 
 
 def _grid(n: int, results: dict) -> None:
@@ -50,11 +52,17 @@ def _grid(n: int, results: dict) -> None:
     runs = [("count", b, lambda b=b: query_count(bvh, pred, backend=b))
             for b in ("stackless", "stack")]
     runs += [("csr_two_pass", b,
-              lambda b=b: query_csr(bvh, pred, backend=b)[1])
+              lambda b=b: query_csr(bvh, pred, backend=b).indices)
+             for b in ("stackless", "stack")]
+    # device-resident CSR: fixed capacity, no host sync anywhere
+    cap_dev = n * cap0
+    runs += [("csr_device", b,
+              lambda b=b: query_csr_device(bvh, pred, cap_dev,
+                                           backend=b).indices)
              for b in ("stackless", "stack")]
     runs += [("csr_buffered", b,
               lambda b=b: query_csr_buffered(bvh, pred, capacity=cap0,
-                                             backend=b)[1])
+                                             backend=b).indices)
              for b in ("stackless", "stack")]
     runs.append(("count", "pair", pair_count))
 

@@ -17,8 +17,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fig1_insitu, fig4_timeline, halo_pipeline,
-                            kernels_micro, query_micro, table1_morton)
+    from benchmarks import (distributed_pipeline, fig1_insitu, fig4_timeline,
+                            halo_pipeline, kernels_micro, query_micro,
+                            table1_morton)
 
     suites = {
         "table1": lambda: table1_morton.main(n=(1 << 15) if args.fast else (1 << 18)),
@@ -27,6 +28,7 @@ def main() -> None:
         "kernels": kernels_micro.main,
         "halos": lambda: halo_pipeline.main(fast=args.fast),
         "query": lambda: query_micro.main(fast=args.fast),
+        "distributed": lambda: distributed_pipeline.main(fast=args.fast),
     }
     print("name,us_per_call,derived")
     failures = []

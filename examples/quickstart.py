@@ -38,7 +38,8 @@ print(f"FDBSCAN:  {int((np.asarray(res.labels) >= 0).sum())} clustered, "
 # same entry point (with Morton query sorting a flip of a switch).
 from repro.core.bvh import build_bvh
 from repro.core.geometry import scene_bounds
-from repro.core.query import nearest, query, query_count, query_csr, within
+from repro.core.query import (nearest, query, query_count, query_csr,
+                              query_csr_device, within)
 
 jp = jnp.asarray(points)
 lo, hi = scene_bounds(jp)
@@ -48,8 +49,21 @@ bvh = build_bvh(jp, lo, hi)
 #    counts saturate at stop_at — only the >= min_pts verdict matters):
 counts = query_count(bvh, within(jp, eps), stop_at=min_pts)
 
-# 2. full neighbor lists as two-pass count-then-fill CSR:
-offsets, indices = query_csr(bvh, within(jp, eps))
+# 2. full neighbor lists as count-then-fill CSR. With no capacity, one host
+#    sync sizes the output exactly:
+csr = query_csr(bvh, within(jp, eps))
+offsets, indices = csr.offsets, csr.indices
+
+# 2b. the DEVICE-RESIDENT variant (the ArborX 2.0 contract): pass a capacity
+#     bound and the count → exclusive scan → scatter-fill pipeline stays on
+#     device end to end — jit-traceable, no sync, overflow reported as a
+#     flag. This is the protocol the sharded pipeline builds on (see
+#     examples/distributed_halo_finding.py: the whole build → ghost exchange
+#     → query → DBSCAN → catalog merge chain runs inside ONE shard_map
+#     region with zero host round-trips).
+dev = query_csr_device(bvh, within(jp, eps), capacity=64 * n)
+assert not bool(dev.overflowed)
+assert int(dev.total) == int(csr.offsets[-1])
 
 # 3. a fused callback: sum of neighbor indices, no storage at all —
 #    must agree with the CSR materialization of the same predicate:

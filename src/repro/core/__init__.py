@@ -26,10 +26,14 @@ from repro.core.dbscan import (
     fdbscan,
     fdbscan_densebox,
     fdbscan_pair,
+    min_core_label_on,
+    union_rounds,
 )
 from repro.core.geometry import Aabb, aabb_of_points
 from repro.core.morton import morton32, morton64, normalize_points
 from repro.core.query import (
+    BufferedCsr,
+    DeviceCsr,
     IntersectsBox,
     Nearest,
     NearestResult,
@@ -43,6 +47,7 @@ from repro.core.query import (
     query_count,
     query_csr,
     query_csr_buffered,
+    query_csr_device,
     query_fixed,
     ray,
     within,
@@ -56,24 +61,26 @@ from repro.core.knn import KnnResult, knn
 from repro.core.emst import EmstResult, emst
 from repro.core.correlation import pair_count_histogram, two_point_correlation
 from repro.core.interpolate import mls_interpolate
-from repro.core.raycast import RayHits, raycast
+from repro.core.raycast import RayHits, raycast, raycast_all
 from repro.core import union_find
 
 __all__ = [
     "Bvh", "build_bvh", "build_bvh_objects", "SENTINEL",
     "CellGrid", "build_cell_grid", "cell_box",
     "NOISE", "DbscanResult", "count_neighbors",
+    "min_core_label_on", "union_rounds",
     "dbscan_graph_cc", "fdbscan", "fdbscan_densebox", "fdbscan_pair",
     "Aabb", "aabb_of_points",
     "morton32", "morton64", "normalize_points",
     "Within", "IntersectsBox", "Nearest", "Ray",
-    "NearestResult", "RayResult",
+    "NearestResult", "RayResult", "DeviceCsr", "BufferedCsr",
     "within", "intersects_box", "nearest", "ray",
-    "query", "query_count", "query_csr", "query_csr_buffered", "query_fixed",
+    "query", "query_count", "query_csr", "query_csr_buffered",
+    "query_csr_device", "query_fixed",
     "node_reduce",
     "pair_traverse_sphere", "traverse_sphere_stack", "traverse_sphere_stackless",
     "KnnResult", "knn", "EmstResult", "emst",
     "pair_count_histogram", "two_point_correlation",
-    "mls_interpolate", "RayHits", "raycast",
+    "mls_interpolate", "RayHits", "raycast", "raycast_all",
     "union_find",
 ]

@@ -54,6 +54,8 @@ __all__ = [
     "NOISE",
     "DbscanResult",
     "count_neighbors",
+    "min_core_label_on",
+    "union_rounds",
     "dbscan_graph_cc",
     "fdbscan",
     "fdbscan_pair",
@@ -94,16 +96,29 @@ def _core_mask(bvh, points, eps, min_pts, early_stop=True, use_stack=False):
 # Min-label candidate traversal (shared by fdbscan variants)
 # ---------------------------------------------------------------------------
 
-def _min_core_label_pass(bvh, points, eps, parent, core, queries_mask, n):
-    """For each point i with queries_mask[i], traverse and return
-    min over core ε-neighbors j of parent[j] (n if none). One engine
-    callback; the ε test is the engine's predicate gate."""
-    def fn(best, _qi, j, _d2):
-        return jnp.where(core[j], jnp.minimum(best, parent[j]), best), jnp.bool_(False)
+def min_core_label_on(bvh: Bvh, query_pts: jax.Array, eps, obj_labels,
+                      obj_core, queries_mask, sentinel) -> jax.Array:
+    """Engine pass shared by the FDBSCAN variants AND the distributed layer:
+    for each query point with ``queries_mask`` set, the min over core
+    ε-neighbor OBJECTS j of ``obj_labels[j]`` (``sentinel`` if none).
 
-    out = query(bvh, within(points, jnp.asarray(eps, points.dtype)),
-                fn, jnp.int32(n))
-    return jnp.where(queries_mask, out, jnp.int32(n))
+    ``obj_labels`` / ``obj_core`` are indexed by the TREE's object index —
+    decoupled from the query set, so the distributed layer can run local
+    queries against a local ∪ ghost tree with exchanged ghost labels."""
+    sentinel = jnp.int32(sentinel)
+
+    def fn(best, _qi, j, _d2):
+        return (jnp.where(obj_core[j], jnp.minimum(best, obj_labels[j]), best),
+                jnp.bool_(False))
+
+    out = query(bvh, within(query_pts, jnp.asarray(eps, query_pts.dtype)),
+                fn, sentinel)
+    return jnp.where(queries_mask, out, sentinel)
+
+
+def _min_core_label_pass(bvh, points, eps, parent, core, queries_mask, n):
+    """Self-join wrapper: queries == objects == ``points``."""
+    return min_core_label_on(bvh, points, eps, parent, core, queries_mask, n)
 
 
 def _finish_labels(parent, border_candidate, core, n):
@@ -114,9 +129,12 @@ def _finish_labels(parent, border_candidate, core, n):
     return jnp.where(labels >= 0, resolved, NOISE).astype(jnp.int32)
 
 
-def _union_rounds(bvh, points, eps, core, n, max_rounds=64):
+def union_rounds(bvh, points, eps, core, n, max_rounds=64):
     """Fixpoint: hook each core point's root under the min core-neighbor label,
-    then pointer-jump. Labels converge to the min original index per cluster."""
+    then pointer-jump. Labels converge to the min original index per cluster.
+
+    Public so the distributed layer can run the same local union fixpoint on a
+    per-shard tree before the cross-shard label rounds."""
     parent0 = jnp.arange(n, dtype=jnp.int32)
 
     def cond(state):
@@ -136,6 +154,9 @@ def _union_rounds(bvh, points, eps, core, n, max_rounds=64):
 
     parent, _, rounds = jax.lax.while_loop(cond, body, (parent0, jnp.bool_(True), jnp.int32(0)))
     return parent, rounds
+
+
+_union_rounds = union_rounds
 
 
 @partial(jax.jit, static_argnames=("min_pts", "early_stop", "use_stack", "use_64bit"))

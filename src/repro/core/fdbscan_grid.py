@@ -37,8 +37,8 @@ from repro.core import union_find
 from repro.kernels import ops as kops
 from repro.kernels.pairwise import BIG, SENTINEL_LABEL
 
-__all__ = ["CellBins", "bin_points", "stencil_neighbor_map", "fdbscan_grid",
-           "fdbscan_grid_auto", "grid_dims_for"]
+__all__ = ["CellBins", "GridAutoInfo", "bin_points", "stencil_neighbor_map",
+           "fdbscan_grid", "fdbscan_grid_auto", "grid_dims_for"]
 
 
 class CellBins(NamedTuple):
@@ -190,20 +190,34 @@ def fdbscan_grid(points: jax.Array, eps, min_pts: int, *,
     return DbscanResult(labels=labels, core_mask=core, num_rounds=rounds), bins.overflowed
 
 
+class GridAutoInfo(NamedTuple):
+    """Retry observability for ``fdbscan_grid_auto`` (mirrors the engine's
+    ``BufferedCsr`` contract: never fail silently on capacity tuning)."""
+    attempts: int   # passes taken (1 = zero-retry fast path)
+    capacity: int   # cell capacity the successful attempt used
+    overflowed: bool  # whether ANY attempt overflowed (i.e. retries happened)
+
+
 def fdbscan_grid_auto(points: jax.Array, eps, min_pts: int, *, scene_lo,
                       scene_hi, capacity: int = 64, max_doublings: int = 6,
-                      **kw) -> DbscanResult:
+                      with_info: bool = False, **kw):
     """Auto-tuning driver (the paper's §5 future-work item, adapted): run
     the TPU-native FDBSCAN and, on capacity overflow, re-bin with doubled
     cell capacity — the recoverable analogue of the adjacency-graph
     variant's documented out-of-memory failure (§4.3.1). Host-side retry
-    loop; each attempt is a fresh jit specialization."""
+    loop; each attempt is a fresh jit specialization.
+
+    With ``with_info=True`` returns (DbscanResult, GridAutoInfo) so callers
+    can see how many re-bins the capacity heuristic cost."""
     dims = grid_dims_for(scene_lo, scene_hi, float(eps))
     cap = capacity
-    for _ in range(max_doublings + 1):
+    for attempt in range(1, max_doublings + 2):
         res, overflowed = fdbscan_grid(points, eps, min_pts, scene_lo=scene_lo,
                                        grid_dims=dims, capacity=cap, **kw)
         if not bool(overflowed):
+            if with_info:
+                return res, GridAutoInfo(attempts=attempt, capacity=cap,
+                                         overflowed=attempt > 1)
             return res
         cap *= 2
     raise RuntimeError(

@@ -12,10 +12,13 @@ analysis — converged on a SINGLE dispatcher with
 * **fused callbacks** (§4.1.1) executed per predicate-object intersection
   inside the traversal loop, with early exit (§4.1.2,
   ``CallbackTreeTraversalControl``) when the callback reports done,
-* **output protocols** on top of the callback machinery: a two-pass
-  count-then-fill CSR (``query_csr`` -> ``offsets``/``indices``) and a
-  single-pass fixed-capacity variant with overflow detection and doubling
-  retry (``query_csr_buffered``, the §4.1 buffer optimization),
+* **output protocols** on top of the callback machinery: a DEVICE-RESIDENT
+  scan-then-scatter CSR (``query_csr_device`` — count, on-device exclusive
+  scan, resumable chunked scatter at per-query offsets; jit-traceable, no
+  host sync, no dense ``(q, max_count)`` staging), its dynamic-shape host
+  convenience ``query_csr``, and a single-pass fixed-capacity variant with
+  overflow detection and doubling retry (``query_csr_buffered``, the §4.1
+  buffer optimization, retry count observable),
 * **traversal backends** (``stackless`` rope / ``stack`` / ``pair``)
   selectable per call, and engine-level Morton **query sorting** (§4.2.2)
   so every client inherits traversal-coherence improvements at once.
@@ -62,8 +65,9 @@ from repro.core.morton import morton32, normalize_points, sort_by_morton32
 __all__ = [
     "Within", "IntersectsBox", "Nearest", "Ray",
     "within", "intersects_box", "nearest", "ray",
-    "NearestResult", "RayResult",
-    "query", "query_count", "query_fixed", "query_csr", "query_csr_buffered",
+    "NearestResult", "RayResult", "DeviceCsr", "BufferedCsr",
+    "query", "query_count", "query_fixed", "query_csr", "query_csr_device",
+    "query_csr_buffered",
     "traverse", "traverse_nearest_stack", "node_reduce",
     "query_sort_permutation",
 ]
@@ -126,6 +130,24 @@ class NearestResult(NamedTuple):
 class RayResult(NamedTuple):
     index: jax.Array   # (q,) int32 — original object index (-1 = miss)
     t: jax.Array       # (q,) f32 — entry parameter along the ray
+
+
+class DeviceCsr(NamedTuple):
+    """Device-resident CSR output. ``indices`` is bound-sized (``capacity``);
+    ``total`` is the true hit count (a device scalar — may exceed capacity,
+    in which case ``overflowed`` is set and surplus hits were dropped)."""
+    offsets: jax.Array     # (q+1,) int32 exclusive-scan row starts
+    indices: jax.Array     # (capacity,) int32, -1 padded past ``total``
+    total: jax.Array       # () int32
+    overflowed: jax.Array  # () bool
+
+
+class BufferedCsr(NamedTuple):
+    """Single-pass buffered CSR with observable retry behaviour."""
+    offsets: jax.Array   # (q+1,) int32
+    indices: jax.Array   # (total,) int32
+    attempts: int        # host int — passes taken (1 = zero-retry fast path)
+    overflowed: bool     # host bool — whether ANY attempt overflowed
 
 
 # ---------------------------------------------------------------------------
@@ -396,6 +418,28 @@ def _spatial_fns(bvh: Bvh, pred):
 
         return geom, node_fn, leaf_aux
 
+    if isinstance(pred, Ray):
+        # All-intersections ray mode: the predicate is "the ray's slab test
+        # hits the leaf volume"; callbacks receive the ENTRY PARAMETER t in
+        # the last argument slot (the quantity the nearest-hit protocol ranks
+        # by), not a squared distance.
+        geom = (pred.origins, pred.directions)
+
+        def node_fn(q, carry, node):
+            (_, origin, direction) = q
+            _, hit = _ray_box(origin, _safe_inv(direction),
+                              bvh.node_lo[node], bvh.node_hi[node])
+            return hit
+
+        def leaf_aux(q, sorted_idx):
+            (_, origin, direction) = q
+            leaf_node = jnp.clip(sorted_idx, 0, n - 1) + (n - 1)
+            t, hit = _ray_box(origin, _safe_inv(direction),
+                              bvh.node_lo[leaf_node], bvh.node_hi[leaf_node])
+            return t, hit
+
+        return geom, node_fn, leaf_aux
+
     raise TypeError(f"not a spatial predicate: {type(pred).__name__}")
 
 
@@ -522,6 +566,12 @@ def _nearest_query(bvh, pred: Nearest, callback, carry_init, sort_queries):
 
 # --- rays (nearest-hit protocol) --------------------------------------------
 
+def _safe_inv(direction):
+    """1/direction with zero components nudged off the axis (slab method)."""
+    return 1.0 / jnp.where(jnp.abs(direction) < 1e-12,
+                           jnp.sign(direction) * 1e-12 + 1e-12, direction)
+
+
 def _ray_box(origin, inv_dir, lo, hi):
     """Slab test. Returns (t_entry, hit) with t_entry >= 0."""
     t0 = (lo - origin) * inv_dir
@@ -538,8 +588,7 @@ def _ray_batched(bvh: Bvh, origins: jax.Array, directions: jax.Array) -> RayResu
     n = bvh.num_leaves
 
     def one(origin, direction):
-        inv = 1.0 / jnp.where(jnp.abs(direction) < 1e-12,
-                              jnp.sign(direction) * 1e-12 + 1e-12, direction)
+        inv = _safe_inv(direction)
         stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
 
         def cond(state):
@@ -579,9 +628,8 @@ def _ray_batched(bvh: Bvh, origins: jax.Array, directions: jax.Array) -> RayResu
 
 
 def _ray_query(bvh, pred: Ray, callback, sort_queries):
-    if callback is not None:
-        raise NotImplementedError("ray predicates support the nearest-hit "
-                                  "protocol; callbacks are a follow-up")
+    """Nearest-hit protocol (callback=None). With a callback, rays dispatch
+    through the spatial path instead — the ALL-INTERSECTIONS protocol."""
     origins, directions = pred.origins, pred.directions
     if sort_queries:
         perm = query_sort_permutation(bvh, origins)
@@ -604,7 +652,11 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
       in sorted leaf order, see ``_pair_query``).
     * ``Nearest`` -> ``NearestResult`` (or carries, if a callback is given:
       invoked per result in ascending-distance order).
-    * ``Ray`` -> ``RayResult`` (nearest hit).
+    * ``Ray`` without callback -> ``RayResult`` (nearest hit). With a
+      callback, rays run the ALL-INTERSECTIONS protocol: the callback fires
+      per leaf volume the ray pierces, with the entry parameter ``t`` in the
+      last argument (so every output protocol — counts, fixed buffers, CSR —
+      works on rays too).
 
     ``sort_queries=True`` Morton-sorts queries against the tree's scene
     bounds before traversal and unsorts the outputs (§4.2.2) — results are
@@ -613,7 +665,12 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
     if isinstance(predicates, Nearest):
         return _nearest_query(bvh, predicates, callback, carry_init, sort_queries)
     if isinstance(predicates, Ray):
-        return _ray_query(bvh, predicates, callback, sort_queries)
+        if callback is None:
+            return _ray_query(bvh, predicates, None, sort_queries)
+        if backend == "pair":
+            raise ValueError("backend='pair' is a within() self-join")
+        return _spatial_query(bvh, predicates, callback, carry_init, backend,
+                              sort_queries)
     if not isinstance(predicates, (Within, IntersectsBox)):
         raise TypeError(f"unknown predicate type {type(predicates).__name__}")
     if callback is None:
@@ -678,7 +735,7 @@ def _compact_csr(buf: jax.Array, counts: jax.Array):
     q, cap = buf.shape
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                jnp.cumsum(counts).astype(jnp.int32)])
-    total = int(offsets[-1])
+    total = int(offsets[-1]) if q else 0
     pos = offsets[:-1, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
     valid = jnp.arange(cap)[None, :] < counts[:, None]
     # invalid lanes write to a trash slot past the end
@@ -687,41 +744,199 @@ def _compact_csr(buf: jax.Array, counts: jax.Array):
     return offsets, indices
 
 
-def query_csr(bvh: Bvh, predicates, *, backend: str = "stackless",
-              sort_queries: bool = False):
-    """Two-pass count-then-fill CSR output (§4.1): pass 1 counts per query,
-    the exact totals size the result, pass 2 fills. Returns ``(offsets
-    (q+1,), indices (total,))`` with per-query indices in traversal order.
-    Host-synchronizes between passes (the total is data-dependent) — call
-    it OUTSIDE jit.
+def _csr_fill(bvh: Bvh, pred, offsets: jax.Array, capacity: int, *,
+              chunk: int, backend: str, sort_queries: bool) -> jax.Array:
+    """Pass 2 of the device-resident protocol: RESUMABLE chunked
+    scatter-fill. Each query carries its paused traversal state (one int32
+    node pointer for the rope backend, (sp, stack) for the stack backend);
+    per outer round every live query collects up to ``chunk`` hits, which
+    are scattered straight to ``offsets[q] + slot`` in the shared
+    total-size buffer. Staging memory is O(q * chunk), never
+    ``(q, max_count)``, and traversal work is not repeated across rounds —
+    each round resumes exactly where the last one paused. All control flow
+    is ``lax.while_loop``: no host sync anywhere."""
+    geom, node_fn, leaf_aux = _spatial_fns(bvh, pred)
+    q_count = jax.tree.leaves(geom)[0].shape[0]
+    qdata = (jnp.arange(q_count, dtype=jnp.int32),) + geom
+    if sort_queries:
+        perm = query_sort_permutation(bvh, _pred_centers(pred))
+        qdata = _apply_sort(perm, qdata)
+    n = bvh.num_leaves
+    chunk = max(int(chunk), 1)
+    out0 = jnp.full((capacity + 1,), -1, jnp.int32)  # last slot = trash
+    if q_count == 0:
+        return out0[:capacity]
+    # Output segment start per traversal lane (original-order offsets).
+    base = offsets[:-1][qdata[0]]
 
-    Memory note: the fill pass stages a dense ``(q, max(counts))`` buffer
-    before compaction (XLA has no per-query-offset scatter inside vmap),
-    so one very dense query inflates the staging cost for all queries —
-    on heavily skewed neighborhoods, chunk the predicate set or use the
-    fused-callback protocol instead (ROADMAP: device-resident CSR)."""
+    def record(q, buf, nh, node):
+        is_leaf = node >= n - 1
+        sorted_idx = jnp.clip(node - (n - 1), 0, n - 1)
+        _, hit = leaf_aux(q, sorted_idx)
+        take = is_leaf & hit
+        buf = jnp.where(
+            take, buf.at[jnp.clip(nh, 0, chunk - 1)].set(
+                bvh.leaf_perm[sorted_idx]), buf)
+        return buf, nh + take.astype(jnp.int32), is_leaf
+
+    if backend == "stackless":
+        state0 = jnp.zeros((q_count,), jnp.int32)
+
+        def live(state):
+            return state != SENTINEL
+
+        def round_one(q, node0):
+            def cond(s):
+                node, _, nh = s
+                return (node != SENTINEL) & (nh < chunk)
+
+            def body(s):
+                node, buf, nh = s
+                buf, nh, is_leaf = record(q, buf, nh, node)
+                node_c = jnp.clip(node, 0, n - 2)
+                descend = node_fn(q, None, node)
+                node = jnp.where(
+                    is_leaf, bvh.rope[node],
+                    jnp.where(descend, bvh.left_child[node_c],
+                              bvh.rope[node]))
+                return node, buf, nh
+
+            node, buf, nh = jax.lax.while_loop(
+                cond, body,
+                (node0, jnp.full((chunk,), -1, jnp.int32), jnp.int32(0)))
+            return node, buf, nh
+    elif backend == "stack":
+        state0 = (jnp.ones((q_count,), jnp.int32),
+                  jnp.full((q_count, _STACK_DEPTH), SENTINEL,
+                           jnp.int32).at[:, 0].set(0))
+
+        def live(state):
+            return state[0] > 0
+
+        def round_one(q, st0):
+            def cond(s):
+                sp, _, _, nh = s
+                return (sp > 0) & (nh < chunk)
+
+            def body(s):
+                sp, stack, buf, nh = s
+                node = stack[sp - 1]
+                sp = sp - 1
+                buf, nh, is_leaf = record(q, buf, nh, node)
+                descend = node_fn(q, None, node) & ~is_leaf
+                node_c = jnp.clip(node, 0, n - 2)
+                stack = stack.at[sp].set(
+                    jnp.where(descend, bvh.right_child[node_c], stack[sp]))
+                sp_r = sp + descend.astype(jnp.int32)
+                stack = stack.at[sp_r].set(
+                    jnp.where(descend, bvh.left_child[node_c], stack[sp_r]))
+                return sp_r + descend.astype(jnp.int32), stack, buf, nh
+
+            sp, stack, buf, nh = jax.lax.while_loop(
+                cond, body, (st0[0], st0[1],
+                             jnp.full((chunk,), -1, jnp.int32), jnp.int32(0)))
+            return (sp, stack), buf, nh
+    else:
+        raise ValueError(f"unknown backend {backend!r} for the device CSR "
+                         "path (use 'stackless' or 'stack')")
+
+    lane = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+
+    def cond(loop):
+        state, _, _ = loop
+        return jnp.any(live(state))
+
+    def body(loop):
+        state, emitted, out = loop
+        state, bufs, nhs = jax.vmap(round_one)(qdata, state)
+        pos = (base + emitted)[:, None] + lane
+        ok = (lane < nhs[:, None]) & (pos < capacity)
+        out = out.at[jnp.where(ok, pos, capacity).reshape(-1)] \
+            .set(bufs.reshape(-1))
+        return state, emitted + nhs, out
+
+    _, _, out = jax.lax.while_loop(
+        cond, body, (state0, jnp.zeros((q_count,), jnp.int32), out0))
+    return out[:capacity]
+
+
+def query_csr_device(bvh: Bvh, predicates, capacity: int, *, counts=None,
+                     chunk: int = 32, backend: str = "stackless",
+                     sort_queries: bool = False) -> DeviceCsr:
+    """Fully DEVICE-RESIDENT scan-then-scatter CSR (the ArborX 2.0
+    count-then-fill backbone, with no host round-trip): pass 1 counts per
+    predicate, an on-device exclusive scan produces per-query offsets, and
+    pass 2's fused traversal scatters hits directly at ``offsets[q] + slot``
+    into one total-size buffer of static bound ``capacity``.
+
+    jit-traceable end-to-end — there is NO Python-level sync of device
+    values between the count and fill passes, and no dense
+    ``(q, max_count)`` staging buffer (staging is O(q * chunk)). Returns
+    ``DeviceCsr(offsets, indices, total, overflowed)``; hits past
+    ``capacity`` are dropped and flagged. ``counts`` may be passed to reuse
+    a precomputed pass 1."""
+    if backend == "pair":
+        raise ValueError("output protocols are per-query; the pair backend's "
+                         "half-lists need a callback (use query(...))")
+    capacity = max(int(capacity), 0)
+    if counts is None:
+        counts = query_count(bvh, predicates, backend=backend,
+                             sort_queries=sort_queries)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts).astype(jnp.int32)])
+    indices = _csr_fill(bvh, predicates, offsets, capacity, chunk=chunk,
+                        backend=backend, sort_queries=sort_queries)
+    total = offsets[-1]
+    return DeviceCsr(offsets=offsets, indices=indices, total=total,
+                     overflowed=total > capacity)
+
+
+def query_csr(bvh: Bvh, predicates, *, capacity: int | None = None,
+              chunk: int = 32, backend: str = "stackless",
+              sort_queries: bool = False) -> DeviceCsr:
+    """Count-then-fill CSR output (§4.1), device-resident. With
+    ``capacity`` given this IS ``query_csr_device`` (jit-traceable, zero
+    host syncs). With ``capacity=None`` (the dynamic-shape convenience,
+    host-side only) the exact total sizes ``indices`` — the one
+    unavoidable sync for a data-dependent output shape; the count and fill
+    passes themselves still never stage a dense ``(q, max_count)`` buffer.
+
+    Returns ``DeviceCsr(offsets (q+1,), indices, total, overflowed)`` with
+    per-query indices in traversal order; ``overflowed`` is always False on
+    the exact-size path. Handles empty predicate sets (q == 0: offsets is
+    ``[0]``, indices empty)."""
+    if capacity is not None:
+        return query_csr_device(bvh, predicates, capacity, chunk=chunk,
+                                backend=backend, sort_queries=sort_queries)
     counts = query_count(bvh, predicates, backend=backend,
                          sort_queries=sort_queries)
-    cap = max(int(jnp.max(counts)) if counts.shape[0] else 0, 1)
-    buf, _, _ = query_fixed(bvh, predicates, cap, backend=backend,
+    exact = int(jnp.sum(counts)) if counts.shape[0] else 0
+    return query_csr_device(bvh, predicates, exact, counts=counts,
+                            chunk=chunk, backend=backend,
                             sort_queries=sort_queries)
-    return _compact_csr(buf, counts)
 
 
 def query_csr_buffered(bvh: Bvh, predicates, *, capacity: int = 8,
                        max_doublings: int = 16, backend: str = "stackless",
-                       sort_queries: bool = False):
+                       sort_queries: bool = False) -> BufferedCsr:
     """Single-pass CSR with the §4.1 buffer optimization: optimistically
     fill fixed per-query buffers of ``capacity``; if ANY query overflows,
     double and retry (each retry is one pass — the common case is zero
     retries, beating the two-pass protocol by ~2x when the guess holds).
-    Returns ``(offsets, indices)`` identical to ``query_csr``."""
+    Host-driven by construction (each retry decision is a sync). Returns
+    ``BufferedCsr(offsets, indices, attempts, overflowed)`` — the retry
+    count is observable, not silent: ``attempts == 1`` is the zero-retry
+    fast path, ``overflowed`` reports whether any pass overflowed."""
     cap = max(int(capacity), 1)
-    for _ in range(max_doublings + 1):
+    overflowed_any = False
+    for attempt in range(1, max_doublings + 2):
         buf, counts, overflow = query_fixed(bvh, predicates, cap,
                                             backend=backend,
                                             sort_queries=sort_queries)
         if not bool(overflow):
-            return _compact_csr(buf, counts)
+            offsets, indices = _compact_csr(buf, counts)
+            return BufferedCsr(offsets=offsets, indices=indices,
+                               attempts=attempt, overflowed=overflowed_any)
+        overflowed_any = True
         cap *= 2
     raise RuntimeError(f"query_csr_buffered: still overflowing at capacity {cap}")

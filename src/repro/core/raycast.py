@@ -5,17 +5,22 @@ engine — the ``ray`` predicate dispatched through ``core.query.query``
 best entry t, all inside the engine).
 
 Leaves are boxed objects (build the BVH with `build_bvh_objects`); returns
-the nearest-entry leaf for each ray (index + t), or (-1, inf) on miss."""
+the nearest-entry leaf for each ray (index + t), or (-1, inf) on miss.
+
+``raycast_all`` is the all-intersections mode: every leaf each ray pierces,
+streamed through the device-resident CSR output protocol (no host sync with
+``capacity=``; hits per ray at ``indices[offsets[i]:offsets[i+1]]``)."""
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
 
 from repro.core.bvh import Bvh
-from repro.core.query import query, ray as _ray
+from repro.core.query import (DeviceCsr, query, query_csr, ray as _ray)
 
-__all__ = ["RayHits", "raycast"]
+__all__ = ["RayHits", "raycast", "raycast_all"]
 
 
 class RayHits(NamedTuple):
@@ -28,3 +33,17 @@ def raycast(bvh: Bvh, origins: jax.Array, directions: jax.Array) -> RayHits:
     """Nearest hit for each ray. origins/directions: (r, d)."""
     res = query(bvh, _ray(origins, directions))
     return RayHits(index=res.index, t=res.t)
+
+
+def raycast_all(bvh: Bvh, origins: jax.Array, directions: jax.Array, *,
+                capacity: int | None = None, chunk: int = 32,
+                backend: str = "stackless",
+                sort_queries: bool = False) -> DeviceCsr:
+    """ALL leaf intersections per ray (unordered within a row), as CSR.
+
+    With ``capacity=`` the whole thing is device-resident and jit-traceable
+    (overflow hits past capacity are dropped and flagged); with
+    ``capacity=None`` one host sync sizes the result exactly. Rays with
+    t ≥ 0: intersections behind the origin don't count."""
+    return query_csr(bvh, _ray(origins, directions), capacity=capacity,
+                     chunk=chunk, backend=backend, sort_queries=sort_queries)

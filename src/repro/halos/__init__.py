@@ -29,8 +29,11 @@ Module map
     Distributed catalog reduction composing with the sharded DBSCAN:
     per-shard partial catalogs (raw per-root sums) merged by global root
     label across shards, plus the centers-dependent max-radius second
-    pass. Entry points: ``halo_catalog_sharded`` (shard_map driver) and
-    the pure ``partial_catalog`` / ``merge_partial_catalogs`` pieces.
+    pass. Entry points: ``halo_catalog_sharded`` (shard_map driver), the
+    pure ``partial_catalog`` / ``merge_partial_catalogs`` pieces, and
+    ``halo_pipeline_sharded`` — the ONE-shard_map-region fusion of the
+    whole chain (per-shard BVH build → ε-ghost exchange → distributed
+    DBSCAN → catalog merge → SO masses) with zero host round-trips.
 
 Reductions run on the Pallas one-hot-matmul segment kernel
 (``kernels/segment.py``) on TPU and on the pure-JAX scatter oracle
@@ -40,12 +43,14 @@ validated against ``core/ref_numpy.halo_catalog_ref``.
 from repro.halos.catalog import HaloCatalog, halo_catalog
 from repro.halos.centers import MostBoundResult, most_bound_centers
 from repro.halos.merge import (
+    HaloPipelineResult,
     PartialCatalog,
     halo_catalog_sharded,
+    halo_pipeline_sharded,
     merge_partial_catalogs,
     partial_catalog,
 )
-from repro.halos.so_mass import SoMassResult, so_masses
+from repro.halos.so_mass import SoMassResult, so_masses, so_masses_from_counts
 
 __all__ = [
     "HaloCatalog",
@@ -53,9 +58,12 @@ __all__ = [
     "MostBoundResult",
     "most_bound_centers",
     "PartialCatalog",
+    "HaloPipelineResult",
     "partial_catalog",
     "merge_partial_catalogs",
     "halo_catalog_sharded",
+    "halo_pipeline_sharded",
     "SoMassResult",
     "so_masses",
+    "so_masses_from_counts",
 ]

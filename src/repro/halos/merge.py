@@ -44,12 +44,14 @@ from repro.kernels.segment import SEG_NEG_BIG
 
 __all__ = [
     "PartialCatalog",
+    "HaloPipelineResult",
     "partial_catalog",
     "merge_partial_catalogs",
     "local_rmax2",
     "particle_slots",
     "finalize_rmax",
     "halo_catalog_sharded",
+    "halo_pipeline_sharded",
 ]
 
 
@@ -181,3 +183,122 @@ def halo_catalog_sharded(points: jax.Array, velocities: jax.Array,
       velocities.reshape(n_shards, -1, velocities.shape[-1]),
       labels.reshape(n_shards, -1))
     return cat._replace(particle_halo=cat.particle_halo.reshape(-1))
+
+
+class HaloPipelineResult(NamedTuple):
+    """Everything the one-region pipeline produces in a single device launch."""
+    labels: jax.Array         # (n_total,) global DBSCAN labels, sharded
+    core_mask: jax.Array      # (n_total,) sharded
+    rounds: jax.Array         # () int32 global merge rounds
+    halo_overflow: jax.Array  # () bool — ghost buffer overflow anywhere
+    catalog: HaloCatalog      # replicated (particle_halo sharded)
+    so: "object"              # SoMassResult when so_delta was given, else None
+
+
+def _pipeline_sharded_gated(fn):
+    # jit gated on core count (see core.distributed._jit_ok: XLA:CPU's
+    # busy-spin collective rendezvous deadlocks jitted shard_map programs
+    # when simulated devices outnumber host cores).
+    from repro.core.distributed import _sharded_jit
+
+    return _sharded_jit(
+        fn, static_argnames=("min_pts", "capacity", "halo_cap", "axis",
+                             "mesh_ref", "min_count", "particle_mass",
+                             "max_rounds", "backend", "so_delta", "box_volume",
+                             "so_r_max", "so_iters"))
+
+
+@_pipeline_sharded_gated
+def _pipeline_sharded(points, velocities, eps, min_pts, capacity, halo_cap,
+                      axis, mesh_ref, min_count, particle_mass, max_rounds,
+                      backend, so_delta, box_volume, so_r_max, so_iters):
+    from repro.core.distributed import dbscan_local_shard, shard_context
+    from repro.halos.so_mass import so_masses_from_counts, sphere_counts
+
+    mesh = mesh_ref.mesh
+    n_shards = mesh.shape[axis]
+    n_total = points.shape[0]
+
+    def local_fn(pts, vel):
+        pts, vel = pts[0], vel[0]
+        # --- build + exchange + cluster (engine traversals, on device) ------
+        ctx = shard_context(pts, eps, halo_cap, axis, n_shards)
+        labels, core, rounds = dbscan_local_shard(
+            pts, eps, min_pts, ctx, axis=axis, max_rounds=max_rounds)
+        # --- catalog: partial sums -> all_gather -> replicated merge --------
+        part = partial_catalog(pts, vel, labels, capacity=capacity,
+                               backend=backend)
+        roots_all = jax.lax.all_gather(part.root, axis)
+        sums_all = jax.lax.all_gather(part.sums, axis)
+        cat = merge_partial_catalogs(
+            roots_all.reshape(-1), sums_all.reshape(-1, sums_all.shape[-1]),
+            capacity=capacity, min_count=min_count,
+            particle_mass=particle_mass)
+        rmax2 = jax.lax.pmax(local_rmax2(pts, labels, cat), axis)
+        cat = finalize_rmax(cat, rmax2)
+        ovf = jax.lax.psum(part.overflow.astype(jnp.int32), axis) > 0
+        cat = cat._replace(overflow=cat.overflow | ovf)
+        slots = particle_slots(labels, cat)
+        cat = cat._replace(particle_halo=slots[None])
+        outs = (labels[None], core[None], rounds[None],
+                ctx.exchange.overflow[None], cat)
+        if so_delta is not None:
+            # SO masses against the LOCAL tree, psum'd across shards: the
+            # centers are replicated, so every shard probes the same spheres
+            # over its own particles and the sum is the global count.
+            def count_fn(c, r):
+                local = sphere_counts(ctx.bvh_local, pts, c, r)
+                return jax.lax.psum(local, axis)
+
+            so = so_masses_from_counts(
+                count_fn, cat.center, cat.count > 0, delta=so_delta,
+                particle_mass=particle_mass, n_particles=n_total,
+                box_volume=box_volume, r_max=so_r_max, iters=so_iters)
+            outs = outs + (so,)
+        return outs
+
+    rep = P()
+    cat_spec = HaloCatalog(
+        num_halos=rep, overflow=rep, root=rep, count=rep, mass=rep,
+        center=rep, vmean=rep, vdisp=rep, rmax=rep, particle_halo=P(axis))
+    out_specs = (P(axis), P(axis), P(axis), P(axis), cat_spec)
+    if so_delta is not None:
+        from repro.halos.so_mass import SoMassResult
+        out_specs = out_specs + (SoMassResult(rep, rep, rep, rep),)
+    spec = P(axis, None)
+    res = shard_map(
+        local_fn, mesh=mesh, in_specs=(spec, spec), out_specs=out_specs,
+        check_rep=False,
+    )(points.reshape(n_shards, -1, points.shape[-1]),
+      velocities.reshape(n_shards, -1, velocities.shape[-1]))
+    labels, core, rounds, ovf, cat = res[:5]
+    cat = cat._replace(particle_halo=cat.particle_halo.reshape(-1))
+    return HaloPipelineResult(
+        labels=labels.reshape(-1), core_mask=core.reshape(-1),
+        rounds=jnp.max(rounds), halo_overflow=jnp.any(ovf), catalog=cat,
+        so=res[5] if so_delta is not None else None)
+
+
+def halo_pipeline_sharded(points: jax.Array, velocities: jax.Array, eps,
+                          min_pts: int, *, mesh: Mesh, axis: str = "data",
+                          capacity: int, halo_cap: int = 512,
+                          min_count: int = 2, particle_mass: float = 1.0,
+                          max_rounds: int = 64, backend: str = "auto",
+                          so_delta: float | None = None,
+                          box_volume: float = 1.0, so_r_max: float = 0.25,
+                          so_iters: int = 20) -> HaloPipelineResult:
+    """The paper's exascale pipeline in ONE ``shard_map`` region: per-shard
+    BVH build → ε-ghost exchange → distributed DBSCAN → catalog merge →
+    max-radius pass → (optionally, with ``so_delta``) SO masses — all engine
+    traversals and collectives, zero host round-trips between stages.
+
+    Inputs are (n_total, d) slab-partitioned like ``dbscan_distributed``'s
+    (pre-sorted by x, n_total divisible by the axis size). The catalog is
+    replicated; ``labels``/``core_mask``/``catalog.particle_halo`` are
+    sharded like the particles."""
+    from repro.core.distributed import _mesh_ref
+
+    return _pipeline_sharded(
+        points, velocities, eps, min_pts, int(capacity), halo_cap, axis,
+        _mesh_ref(mesh), min_count, float(particle_mass), max_rounds,
+        backend, so_delta, float(box_volume), float(so_r_max), so_iters)

@@ -26,7 +26,8 @@ from repro.core.bvh import Bvh, build_bvh
 from repro.core.geometry import scene_bounds
 from repro.core.query import query_count, within
 
-__all__ = ["SoMassResult", "sphere_counts", "so_masses"]
+__all__ = ["SoMassResult", "sphere_counts", "so_masses",
+           "so_masses_from_counts"]
 
 _FOUR_THIRDS_PI = 4.0 / 3.0 * jnp.pi
 
@@ -52,6 +53,48 @@ def sphere_counts(bvh, points: jax.Array, centers: jax.Array,
                     jnp.asarray(radii, jnp.float32)))
 
 
+def so_masses_from_counts(count_fn, centers: jax.Array, valid: jax.Array, *,
+                          delta, particle_mass, n_particles, box_volume,
+                          r_max, iters: int) -> SoMassResult:
+    """The bisection driver, decoupled from WHERE counts come from.
+
+    ``count_fn(centers, radii) -> (H,) int`` returns enclosed particle
+    counts; the single-device path closes over a local BVH, the sharded
+    pipeline closes over the per-shard tree and ``psum``s across shards —
+    either way the driver is one fixed-iteration device loop, so it can run
+    inside a ``shard_map`` region with zero host round-trips.
+    ``n_particles`` is the GLOBAL particle count defining the reference
+    density ``n × particle_mass / box_volume``."""
+    rho_ref = (jnp.asarray(delta, jnp.float32)
+               * n_particles * jnp.asarray(particle_mass, jnp.float32)
+               / jnp.asarray(box_volume, jnp.float32))
+    m = jnp.asarray(particle_mass, jnp.float32)
+    valid_f = valid.astype(jnp.float32)
+
+    def body(_, state):
+        r_lo, r_hi = state
+        mid = 0.5 * (r_lo + r_hi)
+        cnt = count_fn(centers, mid * valid_f)
+        dens = cnt.astype(jnp.float32) * m \
+            / (_FOUR_THIRDS_PI * jnp.maximum(mid, 1e-12) ** 3)
+        above = dens >= rho_ref
+        return jnp.where(above, mid, r_lo), jnp.where(above, r_hi, mid)
+
+    r0 = jnp.full((centers.shape[0],), jnp.asarray(r_max, jnp.float32))
+    r_lo, r_hi = jax.lax.fori_loop(0, iters, body,
+                                   (jnp.zeros_like(r0), r0))
+    r_delta = jnp.where(valid, r_lo, 0.0)
+    count = count_fn(centers, r_delta * valid_f)
+    count = jnp.where(valid, count, 0)
+    # Bracket check: did the density actually cross Δρ_ref inside [0, r_max]?
+    cnt_edge = count_fn(centers, r0 * valid_f)
+    dens_edge = cnt_edge.astype(jnp.float32) * m / (_FOUR_THIRDS_PI * r0 ** 3)
+    return SoMassResult(r_delta=r_delta,
+                        m_delta=count.astype(jnp.float32) * m,
+                        count=count,
+                        bracketed=valid & (dens_edge < rho_ref))
+
+
 @partial(jax.jit, static_argnames=("iters", "use_64bit"))
 def so_masses(points: jax.Array, centers: jax.Array, valid: jax.Array, *,
               delta=200.0, particle_mass=1.0, box_volume=1.0,
@@ -70,32 +113,12 @@ def so_masses(points: jax.Array, centers: jax.Array, valid: jax.Array, *,
     if bvh is None:
         lo_box, hi_box = scene_bounds(points)
         bvh = build_bvh(points, lo_box, hi_box, use_64bit=use_64bit)
+    tree = bvh
 
-    rho_ref = (jnp.asarray(delta, jnp.float32)
-               * n * jnp.asarray(particle_mass, jnp.float32)
-               / jnp.asarray(box_volume, jnp.float32))
-    m = jnp.asarray(particle_mass, jnp.float32)
-    valid_f = valid.astype(jnp.float32)
+    def count_fn(c, r):
+        return sphere_counts(tree, points, c, r)
 
-    def body(_, state):
-        r_lo, r_hi = state
-        mid = 0.5 * (r_lo + r_hi)
-        cnt = sphere_counts(bvh, points, centers, mid * valid_f)
-        dens = cnt.astype(jnp.float32) * m \
-            / (_FOUR_THIRDS_PI * jnp.maximum(mid, 1e-12) ** 3)
-        above = dens >= rho_ref
-        return jnp.where(above, mid, r_lo), jnp.where(above, r_hi, mid)
-
-    r0 = jnp.full((centers.shape[0],), jnp.asarray(r_max, jnp.float32))
-    r_lo, r_hi = jax.lax.fori_loop(0, iters, body,
-                                   (jnp.zeros_like(r0), r0))
-    r_delta = jnp.where(valid, r_lo, 0.0)
-    count = sphere_counts(bvh, points, centers, r_delta * valid_f)
-    count = jnp.where(valid, count, 0)
-    # Bracket check: did the density actually cross Δρ_ref inside [0, r_max]?
-    cnt_edge = sphere_counts(bvh, points, centers, r0 * valid_f)
-    dens_edge = cnt_edge.astype(jnp.float32) * m / (_FOUR_THIRDS_PI * r0 ** 3)
-    return SoMassResult(r_delta=r_delta,
-                        m_delta=count.astype(jnp.float32) * m,
-                        count=count,
-                        bracketed=valid & (dens_edge < rho_ref))
+    return so_masses_from_counts(count_fn, centers, valid, delta=delta,
+                                 particle_mass=particle_mass, n_particles=n,
+                                 box_volume=box_volume, r_max=r_max,
+                                 iters=iters)

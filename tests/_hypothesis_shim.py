@@ -8,7 +8,8 @@ collection. Supports exactly the subset this suite uses:
   parameters, matching hypothesis' convention) and keyword strategies;
 * ``@settings(max_examples=..., deadline=...)`` in either decorator order;
 * ``st.integers(lo, hi)``, ``st.floats(lo, hi)``,
-  ``st.lists(elem, min_size=..., max_size=...)``, ``st.tuples(*elems)``.
+  ``st.lists(elem, min_size=..., max_size=...)``, ``st.tuples(*elems)``,
+  ``st.sampled_from(elems)``.
 
 Examples are drawn from a per-test seeded PRNG (stable across runs); the
 first example of every run is the "minimal" one (lower bounds / shortest
@@ -64,11 +65,17 @@ def _tuples(*elems):
                           lambda: tuple(e.minimal() for e in elems))
 
 
+def _sampled_from(elements):
+    elems = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elems), lambda: elems[0])
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.floats = _floats
 strategies.lists = _lists
 strategies.tuples = _tuples
+strategies.sampled_from = _sampled_from
 strategies.SearchStrategy = SearchStrategy
 
 DEFAULT_MAX_EXAMPLES = 20

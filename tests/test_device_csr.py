@@ -1,0 +1,269 @@
+"""Device-resident CSR protocol (scan-then-scatter, no host sync) + the
+all-hits ray protocol riding on it.
+
+The contract under test (ISSUE 6 / ArborX 2.0's count-then-fill backbone):
+  - `query_csr_device` is jit-traceable end to end with a static capacity;
+    no Python-level sync between the count and fill passes;
+  - staging memory is O(q·chunk + capacity), NEVER the dense
+    (q, max_count) buffer the old fill used — checked on a SKEWED workload
+    (one query matches every leaf, the rest match none) by walking the
+    jaxpr for intermediate shapes;
+  - the dynamic path (`capacity=None`) performs exactly one documented
+    sizing sync and returns an exactly-sized result.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bvh import build_bvh, build_bvh_objects
+from repro.core.geometry import scene_bounds
+from repro.core.query import (query, query_csr, query_csr_buffered,
+                              query_csr_device, ray, within)
+from repro.core.raycast import raycast, raycast_all
+
+
+def _bvh(pts):
+    jp = jnp.asarray(pts)
+    lo, hi = scene_bounds(jp)
+    return build_bvh(jp, lo, hi)
+
+
+def _d2(a, b):
+    return ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+
+
+def _rows(offs, idx, q):
+    return [frozenset(idx[offs[i]:offs[i + 1]].tolist()) for i in range(q)]
+
+
+def _skewed(n=128, nq=64):
+    """One fat query covering the whole unit cube, the rest far away."""
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    queries = np.full((nq, 3), 50.0, np.float32)  # match nothing
+    queries[0] = 0.5
+    radii = np.full((nq,), 1e-3, np.float32)
+    radii[0] = 2.0                                # match EVERYTHING
+    return pts, queries, radii
+
+
+# --- correctness: skewed + property tests vs the oracle ----------------------
+
+def test_skewed_neighborhoods_match_oracle():
+    pts, queries, radii = _skewed()
+    bvh = _bvh(pts)
+    pred = within(jnp.asarray(queries), jnp.asarray(radii))
+    adj = _d2(queries, pts) <= radii[:, None] ** 2
+    assert adj[0].all() and not adj[1:].any()  # the skew is real
+
+    for backend in ("stackless", "stack"):
+        res = query_csr_device(bvh, pred, capacity=len(pts) + 8,
+                               backend=backend)
+        assert not bool(res.overflowed)
+        assert int(res.total) == int(adj.sum())
+        offs, idx = np.asarray(res.offsets), np.asarray(res.indices)
+        np.testing.assert_array_equal(np.diff(offs), adj.sum(1))
+        got = _rows(offs, idx, len(queries))
+        want = [frozenset(np.nonzero(adj[i])[0].tolist())
+                for i in range(len(queries))]
+        assert got == want, backend
+        # padding past total is the sentinel
+        assert (idx[int(res.total):] == -1).all()
+
+
+def test_skewed_staging_memory_is_not_dense():
+    """Walk the jaxpr of the jitted device path: no intermediate may be
+    (q × max_count)-sized — the scan-then-scatter replaces the dense fill."""
+    pts, queries, radii = _skewed(n=256, nq=256)
+    bvh = _bvh(pts)
+    pred = within(jnp.asarray(queries), jnp.asarray(radii))
+    q, max_count = len(queries), len(pts)   # densest query hits every leaf
+    chunk = 16
+    capacity = max_count + 64
+    dense_elems = q * max_count             # 65536 — the forbidden budget
+
+    jaxpr = jax.make_jaxpr(
+        lambda b, p: query_csr_device(b, p, capacity, chunk=chunk))(bvh, pred)
+
+    def all_subjaxprs(jxp, acc):
+        acc.append(jxp)
+        for eqn in jxp.eqns:
+            for val in eqn.params.values():
+                items = val if isinstance(val, (tuple, list)) else [val]
+                for it in items:
+                    inner = getattr(it, "jaxpr", it)
+                    if hasattr(inner, "eqns"):
+                        all_subjaxprs(inner, acc)
+        return acc
+
+    biggest = 0
+    for jxp in all_subjaxprs(jaxpr.jaxpr, []):
+        for eqn in jxp.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "shape", None):
+                    biggest = max(biggest, int(np.prod(aval.shape)))
+    assert biggest > 0                       # the walker actually saw arrays
+    assert biggest < dense_elems, (
+        f"intermediate of {biggest} elems >= dense (q x max_count) = "
+        f"{dense_elems}: the fill is staging a dense buffer again")
+
+
+@given(n=st.integers(2, 50), nq=st.integers(0, 40),
+       eps=st.floats(0.0, 0.6), chunk=st.sampled_from([1, 3, 32]),
+       seed=st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_device_csr_property_vs_oracle(n, nq, eps, chunk, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    queries = rng.uniform(-0.1, 1.1, (nq, 3)).astype(np.float32)
+    bvh = _bvh(pts)
+    pred = within(jnp.asarray(queries), eps)
+    adj = _d2(queries, pts) <= np.float32(eps) ** 2
+    res = query_csr_device(bvh, pred, capacity=int(adj.sum()) + 4, chunk=chunk)
+    assert not bool(res.overflowed)
+    offs, idx = np.asarray(res.offsets), np.asarray(res.indices)
+    np.testing.assert_array_equal(np.diff(offs), adj.sum(1))
+    assert _rows(offs, idx, nq) == [
+        frozenset(np.nonzero(adj[i])[0].tolist()) for i in range(nq)]
+
+
+# --- edge cases --------------------------------------------------------------
+
+def test_csr_empty_predicates():
+    """Zero queries used to crash the sizing pass (max over empty counts)."""
+    pts = np.random.default_rng(0).uniform(0, 1, (16, 3)).astype(np.float32)
+    bvh = _bvh(pts)
+    pred = within(jnp.zeros((0, 3), jnp.float32), 0.1)
+
+    res = query_csr(bvh, pred)
+    assert res.offsets.shape == (1,) and int(res.offsets[0]) == 0
+    assert res.indices.shape == (0,) and int(res.total) == 0
+
+    dev = query_csr_device(bvh, pred, capacity=4)
+    assert dev.offsets.shape == (1,) and int(dev.total) == 0
+    assert (np.asarray(dev.indices) == -1).all()
+
+    buf = query_csr_buffered(bvh, pred, capacity=2)
+    assert buf.indices.shape[0] == 0 and buf.attempts == 1
+
+
+def test_device_csr_overflow_flagged_and_truncated():
+    pts, queries, radii = _skewed(n=64, nq=8)
+    bvh = _bvh(pts)
+    pred = within(jnp.asarray(queries), jnp.asarray(radii))
+    res = query_csr_device(bvh, pred, capacity=10)
+    assert bool(res.overflowed)
+    assert int(res.total) == 64                  # true total, not clamped
+    idx = np.asarray(res.indices)
+    assert idx.shape == (10,) and (idx >= 0).all()
+    assert set(idx.tolist()) <= set(range(64))   # a prefix of query 0's hits
+
+
+# --- jit traceability / no host sync -----------------------------------------
+
+def test_device_csr_jit_traces_without_sync():
+    """jax.jit(query_csr_device) must trace (no concretization errors — i.e.
+    no int()/.item() between count and fill) and, once compiled, run under
+    ``jax.transfer_guard("disallow")`` with zero host transfers."""
+    pts, queries, radii = _skewed(n=64, nq=32)
+    bvh = _bvh(pts)
+    qd = jax.device_put(jnp.asarray(queries))
+    rd = jax.device_put(jnp.asarray(radii))
+
+    @jax.jit
+    def run(bvh, q, r):
+        return query_csr_device(bvh, within(q, r), capacity=96)
+
+    warm = run(bvh, qd, rd)                      # compile outside the guard
+    jax.block_until_ready(warm)
+    with jax.transfer_guard("disallow"):
+        res = run(bvh, qd, rd)
+        jax.block_until_ready(res)
+    assert int(res.total) == 64
+
+    # the dynamic path, by contrast, performs its one documented sizing sync
+    with jax.transfer_guard("disallow"):
+        with pytest.raises(Exception):
+            query_csr(bvh, within(qd, rd))
+
+
+# --- all-hits ray protocol ---------------------------------------------------
+
+def _boxed_scene(n=40, seed=5):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0.05, 0.2, (n, 3)).astype(np.float32)
+    return lo, hi
+
+
+def _ray_box_oracle(o, d, lo, hi):
+    """Numpy slab test: does ray o + t·d (t ≥ 0) hit box [lo, hi]?"""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = np.where(d != 0, 1.0 / d, np.inf)
+    t0 = (lo - o) * inv
+    t1 = (hi - o) * inv
+    near = np.minimum(t0, t1)
+    far = np.maximum(t0, t1)
+    # zero direction components: inside the slab iff lo <= o <= hi
+    inside = (d == 0) & (o >= lo) & (o <= hi)
+    near = np.where(d == 0, np.where(inside, -np.inf, np.inf), near)
+    far = np.where(d == 0, np.where(inside, np.inf, -np.inf), far)
+    tmin = np.maximum(near.max(-1), 0.0)
+    tmax = far.min(-1)
+    return tmin <= tmax
+
+
+def test_raycast_all_matches_slab_oracle():
+    lo, hi = _boxed_scene()
+    slo, shi = scene_bounds(jnp.asarray(np.concatenate([lo, hi])))
+    bvh = build_bvh_objects(jnp.asarray(lo), jnp.asarray(hi), slo, shi)
+
+    rng = np.random.default_rng(7)
+    origins = rng.uniform(-0.5, 1.5, (25, 3)).astype(np.float32)
+    dirs = rng.normal(size=(25, 3)).astype(np.float32)
+
+    res = raycast_all(bvh, jnp.asarray(origins), jnp.asarray(dirs))
+    offs, idx = np.asarray(res.offsets), np.asarray(res.indices)
+    want = np.stack([_ray_box_oracle(origins[i], dirs[i], lo, hi)
+                     for i in range(len(origins))])
+    np.testing.assert_array_equal(np.diff(offs), want.sum(1))
+    assert _rows(offs, idx, len(origins)) == [
+        frozenset(np.nonzero(want[i])[0].tolist())
+        for i in range(len(origins))]
+
+
+def test_raycast_all_device_capacity_and_nearest_consistency():
+    lo, hi = _boxed_scene(n=30, seed=11)
+    slo, shi = scene_bounds(jnp.asarray(np.concatenate([lo, hi])))
+    bvh = build_bvh_objects(jnp.asarray(lo), jnp.asarray(hi), slo, shi)
+
+    rng = np.random.default_rng(13)
+    origins = rng.uniform(-0.5, 1.5, (16, 3)).astype(np.float32)
+    dirs = rng.normal(size=(16, 3)).astype(np.float32)
+    o, d = jnp.asarray(origins), jnp.asarray(dirs)
+
+    # device path under jit agrees with the dynamic path
+    run = jax.jit(lambda: raycast_all(bvh, o, d, capacity=512))
+    dev = run()
+    dyn = raycast_all(bvh, o, d)
+    assert not bool(dev.overflowed)
+    np.testing.assert_array_equal(np.asarray(dev.offsets),
+                                  np.asarray(dyn.offsets))
+    offs = np.asarray(dyn.offsets)
+    di, yi = np.asarray(dev.indices), np.asarray(dyn.indices)
+    assert _rows(offs, di, 16) == _rows(offs, yi, 16)
+
+    # every nearest hit is among that ray's all-hits row
+    near = raycast(bvh, o, d)
+    ni = np.asarray(near.index)
+    rows = _rows(offs, yi, 16)
+    for i in range(16):
+        if ni[i] >= 0:
+            assert ni[i] in rows[i], i
+        else:
+            assert not rows[i], i

@@ -74,9 +74,10 @@ def test_csr_backends_match_bruteforce(dataset):
     adj = _d2(pts, pts) <= np.float32(eps) ** 2
     per_backend = {}
     for backend in ("stackless", "stack"):
-        offs, idx = query_csr(bvh, within(jnp.asarray(pts), eps),
-                              backend=backend)
-        offs, idx = np.asarray(offs), np.asarray(idx)
+        res = query_csr(bvh, within(jnp.asarray(pts), eps), backend=backend)
+        offs, idx = np.asarray(res.offsets), np.asarray(res.indices)
+        assert not bool(res.overflowed)
+        assert int(res.total) == int(adj.sum())
         np.testing.assert_array_equal(np.diff(offs), adj.sum(1))
         rows = [frozenset(idx[offs[i]:offs[i + 1]].tolist())
                 for i in range(len(pts))]
@@ -123,10 +124,14 @@ def test_buffered_csr_overflow_retry():
     _, counts, overflowed = query_fixed(bvh, pred, capacity=1)
     assert bool(overflowed) and int(jnp.max(counts)) > 1  # the trap is armed
 
-    offs_b, idx_b = query_csr_buffered(bvh, pred, capacity=1)
-    offs_t, idx_t = query_csr(bvh, pred)
-    np.testing.assert_array_equal(np.asarray(offs_b), np.asarray(offs_t))
-    np.testing.assert_array_equal(np.asarray(idx_b), np.asarray(idx_t))
+    buf = query_csr_buffered(bvh, pred, capacity=1)
+    two = query_csr(bvh, pred)
+    np.testing.assert_array_equal(np.asarray(buf.offsets),
+                                  np.asarray(two.offsets))
+    np.testing.assert_array_equal(np.asarray(buf.indices),
+                                  np.asarray(two.indices))
+    # the retry count is observable: capacity=1 must have re-run at least once
+    assert buf.attempts > 1 and buf.overflowed
 
 
 def test_query_fixed_reports_true_counts():
@@ -217,12 +222,13 @@ def test_sort_queries_is_transparent(protocol):
         b = query_count(bvh, within(jnp.asarray(queries), 0.3), sort_queries=True)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     elif protocol == "csr":
-        offs_a, idx_a = query_csr(bvh, within(jnp.asarray(queries), 0.3))
-        offs_b, idx_b = query_csr(bvh, within(jnp.asarray(queries), 0.3),
-                                  sort_queries=True)
-        np.testing.assert_array_equal(np.asarray(offs_a), np.asarray(offs_b))
-        offs_a = np.asarray(offs_a)
-        idx_a, idx_b = np.asarray(idx_a), np.asarray(idx_b)
+        res_a = query_csr(bvh, within(jnp.asarray(queries), 0.3))
+        res_b = query_csr(bvh, within(jnp.asarray(queries), 0.3),
+                          sort_queries=True)
+        np.testing.assert_array_equal(np.asarray(res_a.offsets),
+                                      np.asarray(res_b.offsets))
+        offs_a = np.asarray(res_a.offsets)
+        idx_a, idx_b = np.asarray(res_a.indices), np.asarray(res_b.indices)
         for i in range(len(queries)):
             assert (set(idx_a[offs_a[i]:offs_a[i + 1]]) ==
                     set(idx_b[offs_a[i]:offs_a[i + 1]])), i
