@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing, the benchmark dataset (paper §4)."""
+"""Shared benchmark utilities: timing, the benchmark dataset (paper §4),
+and the ``BENCH_*.json`` artifact writer for the regression gate."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -33,3 +36,14 @@ def benchmark_points(n: int, seed: int = 0) -> tuple[np.ndarray, float]:
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def write_artifact(out_path: str, results: dict) -> None:
+    """Write a ``BENCH_*.json`` artifact for ``benchmarks.compare``.
+
+    Keep every field inside a record that carries ``seconds``:
+    ``compare`` tolerance-bands the ``seconds`` value and ignores the rest,
+    while a record WITHOUT ``seconds`` becomes an exact-match contract —
+    too brittle for anything derived from timings or platform specifics.
+    """
+    pathlib.Path(out_path).write_text(json.dumps(results, indent=2))

@@ -1,18 +1,23 @@
 """Microbenchmarks for the Pallas kernels (interpret mode on CPU — relative
 numbers only; the kernels' target is the TPU MXU) and their jnp references.
 The interesting derived number on CPU is ref-vs-kernel agreement + the work
-scaling; absolute us/call is backend-specific."""
+scaling; absolute us/call is backend-specific.
+
+Emits the usual CSV lines plus a ``BENCH_kernels.json`` artifact (kernel and
+reference timings per size) for the ``benchmarks.compare`` regression gate.
+"""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_artifact
 
 
-def main() -> None:
+def main(out_path: str = "BENCH_kernels.json") -> None:
     rng = np.random.default_rng(0)
+    results: dict = {}
     for n, d in ((1024, 3), (1024, 64), (4096, 3)):
         x = jnp.asarray(rng.uniform(0, 1, (n, d)), jnp.float32)
         eps = 0.1
@@ -26,6 +31,10 @@ def main() -> None:
         assert mismatch <= max(4, n // 1000), (n, d, mismatch)
         emit(f"kernel_pairwise_count_n{n}_d{d}", t_k,
              f"ref_us={t_ref * 1e6:.1f};knife_edge_rows={mismatch}")
+        results[f"kernels/pairwise_count_n{n}_d{d}"] = {
+            "seconds": t_k, "n": n, "d": d,
+            "ref_seconds": t_ref, "knife_edge_rows": mismatch}
+    write_artifact(out_path, results)
 
 
 if __name__ == "__main__":

@@ -21,13 +21,11 @@ two-pass vs. fused-callback cost rides along the existing benches.
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import benchmark_points, emit, timeit
+from benchmarks.common import benchmark_points, emit, timeit, write_artifact
 from repro.core.bvh import build_bvh
 from repro.core.geometry import scene_bounds
 from repro.core.query import (query, query_count, query_csr,
@@ -79,7 +77,7 @@ def main(fast: bool = False, out_path: str = "BENCH_query.json") -> None:
     results: dict = {}
     for n in ([512] if fast else [2048, 8192]):
         _grid(n, results)
-    pathlib.Path(out_path).write_text(json.dumps(results, indent=2))
+    write_artifact(out_path, results)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,10 @@ the clustered benchmark problem.
 Paper (37M points): 23.5M points shared a 32-bit code (max 3,569 per code),
 while 64-bit left 528 (max 2). The phenomenon is density-driven, so it
 reproduces qualitatively at smaller n with the same ε convention.
+
+Emits the usual CSV lines plus a ``BENCH_table1.json`` artifact (encode and
+sort timings, collision stats as metadata) for the ``benchmarks.compare``
+regression gate.
 """
 from __future__ import annotations
 
@@ -11,7 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import morton
-from benchmarks.common import benchmark_points, emit, timeit
+from benchmarks.common import benchmark_points, emit, timeit, write_artifact
 
 
 def stats(codes: np.ndarray) -> dict:
@@ -24,7 +28,7 @@ def stats(codes: np.ndarray) -> dict:
     }
 
 
-def main(n: int = 1 << 20) -> None:
+def main(n: int = 1 << 20, out_path: str = "BENCH_table1.json") -> None:
     pts, eps = benchmark_points(n)
     jp = jnp.asarray(pts)
     lo = jp.min(0) - 1e-6
@@ -37,12 +41,17 @@ def main(n: int = 1 << 20) -> None:
         | np.asarray(l).astype(np.uint64)
 
     s32, s64 = stats(c32), stats(c64)
-    emit("table1_32bit", timeit(lambda: morton.morton32(unit)),
+    results: dict = {}
+    t_enc32 = timeit(lambda: morton.morton32(unit))
+    t_enc64 = timeit(lambda: morton.morton64(unit))
+    emit("table1_32bit", t_enc32,
          f"n={n};dup_codes_gt3={s32['dup_codes_gt3']};"
          f"points_with_dup={s32['points_with_dup']};max={s32['max_same_code']}")
-    emit("table1_64bit", timeit(lambda: morton.morton64(unit)),
+    emit("table1_64bit", t_enc64,
          f"n={n};dup_codes_gt3={s64['dup_codes_gt3']};"
          f"points_with_dup={s64['points_with_dup']};max={s64['max_same_code']}")
+    results[f"table1/encode32_n{n}"] = {"seconds": t_enc32, "n": n, **s32}
+    results[f"table1/encode64_n{n}"] = {"seconds": t_enc64, "n": n, **s64}
 
     # Paper's qualitative claim: 64-bit eliminates nearly all duplicates.
     assert s64["points_with_dup"] <= max(1, s32["points_with_dup"] // 100)
@@ -51,6 +60,10 @@ def main(n: int = 1 << 20) -> None:
     t32 = timeit(lambda: morton.sort_by_morton32(morton.morton32(unit)))
     t64 = timeit(lambda: morton.sort_by_morton64(*morton.morton64(unit)))
     emit("table1_sort_cost", t64, f"sort64_vs_sort32={t64 / t32:.2f}x")
+    results[f"table1/sort32_n{n}"] = {"seconds": t32, "n": n}
+    results[f"table1/sort64_n{n}"] = {"seconds": t64, "n": n,
+                                      "vs_sort32": round(t64 / max(t32, 1e-12), 2)}
+    write_artifact(out_path, results)
 
 
 if __name__ == "__main__":

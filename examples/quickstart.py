@@ -78,6 +78,32 @@ nn = query(bvh, nearest(jp[:8], k=4))
 print(f"query API: {int((counts >= min_pts).sum())} core points, "
       f"CSR nnz={int(offsets[-1])}, knn[0]={np.asarray(nn.indices[0])}")
 
+# --- static checks ----------------------------------------------------------
+# The device-discipline rules this file leans on (no dense staging, no host
+# syncs, shard_map jits only via the _maybe_jit gate, consumed overflow
+# flags, guarded min-image folds) are machine-checked by `repro.staticcheck`:
+#
+#   PYTHONPATH=src python -m repro.staticcheck                 # AST lint R1-R4
+#   PYTHONPATH=src python -m repro.staticcheck --jaxpr --fast  # + jaxpr audits
+#   PYTHONPATH=src python -m repro.staticcheck --json report.json
+#
+# Exit status is nonzero iff any finding fired; findings carry file:line
+# anchors, and a `# staticcheck: <token>` pragma (overflow-ok, minimage-ok,
+# bvh-loop-ok, shard-jit-ok, ignore) opts out a deliberate exception. The
+# same rules are importable — prove the device CSR call above never stages
+# the dense (q × max_count) buffer, then watch the lint catch the ROADMAP
+# item 3 f32 trap in a snippet:
+from repro.staticcheck import audit_jaxpr, lint_source, no_dense_intermediate
+
+assert audit_jaxpr(
+    lambda b: query_csr_device(b, within(jp, eps), capacity=64 * n),
+    (bvh,), [no_dense_intermediate(n * n)]) == []
+
+bad = ("import jax.numpy as jnp\n"
+       "def fold(d, L):\n"
+       "    return d - jnp.round(d / L) * L\n")
+print("staticcheck demo:", lint_source(bad, "snippet.py")[0])
+
 # --- TPU-native tier: ε-cell binning + MXU stencil kernels -----------------
 # (interpret-mode on CPU: this section takes several minutes here.)
 dims = grid_dims_for(np.zeros(3), np.ones(3), eps)

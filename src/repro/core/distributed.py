@@ -255,7 +255,7 @@ def _jit_ok() -> bool:
     return (os.cpu_count() or 1) >= jax.local_device_count()
 
 
-def _sharded_jit(fn, *, static_argnames):
+def _maybe_jit(fn, *, static_argnames):
     """``jax.jit`` for shard_map drivers, gated per call by ``_jit_ok``."""
     jitted = jax.jit(fn, static_argnames=static_argnames)
 
@@ -280,7 +280,7 @@ def _mesh_ref(mesh: Mesh):
     return _Ref(mesh)
 
 
-@functools.partial(_sharded_jit,
+@functools.partial(_maybe_jit,
                    static_argnames=("capacity", "halo_cap", "axis", "mesh_ref",
                                     "chunk", "backend", "use_64bit"))
 def _neighbor_csr_sharded(points, eps, capacity, halo_cap, axis, mesh_ref,
@@ -394,7 +394,7 @@ def dbscan_local_shard(pts: jax.Array, eps, min_pts: int, ctx: ShardContext,
     return final.astype(jnp.int32), core, rounds
 
 
-@functools.partial(_sharded_jit,
+@functools.partial(_maybe_jit,
                    static_argnames=("min_pts", "halo_cap", "axis", "mesh_ref",
                                     "max_rounds"))
 def _dbscan_sharded(points, eps, min_pts, halo_cap, axis, mesh_ref, max_rounds):

@@ -199,9 +199,9 @@ def _pipeline_sharded_gated(fn):
     # jit gated on core count (see core.distributed._jit_ok: XLA:CPU's
     # busy-spin collective rendezvous deadlocks jitted shard_map programs
     # when simulated devices outnumber host cores).
-    from repro.core.distributed import _sharded_jit
+    from repro.core.distributed import _maybe_jit
 
-    return _sharded_jit(
+    return _maybe_jit(
         fn, static_argnames=("min_pts", "capacity", "halo_cap", "axis",
                              "mesh_ref", "min_count", "particle_mass",
                              "max_rounds", "backend", "so_delta", "box_volume",

@@ -1,0 +1,60 @@
+"""``repro.staticcheck`` — the repo's performance rules as machine-checked
+gates (the ReFrame idea applied to program STRUCTURE instead of timings).
+
+Two layers:
+
+* **jaxpr audits** (``jaxpr_audit``): trace a callable and enforce
+  device-discipline invariants on every sub-jaxpr —
+  ``no_dense_intermediate`` (no O(n²) staging), ``no_host_transfer``
+  (no callback/device_put-class primitives in device pipelines),
+  ``bounded_recompiles`` (workload sweeps stay under a compiled-shape
+  cap). ``registry.REGISTERED_AUDITS`` applies them to the repo's entry
+  points; ``assert_no_host_transfers`` is the runtime transfer-guard
+  complement used by the tests.
+* **AST lint** (``ast_lint``): repo-specific architecture rules R1–R4
+  over ``src/repro`` (BVH loops only in the engine, gated shard_map
+  jits, consumed CSR overflow flags, guarded min-image folds), with
+  ``# staticcheck: <token>`` opt-out pragmas.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.staticcheck            # AST lint
+    PYTHONPATH=src python -m repro.staticcheck --jaxpr --fast
+    PYTHONPATH=src python -m repro.staticcheck --json report.json
+
+Exit status is nonzero iff any finding fired; the JSON report carries
+``file:line`` anchors for each.
+"""
+from repro.staticcheck.findings import Finding, report_dict, write_report
+from repro.staticcheck.jaxpr_audit import (
+    assert_no_host_transfers,
+    audit_jaxpr,
+    bounded_recompiles,
+    count_compile_signatures,
+    iter_eqns,
+    iter_subjaxprs,
+    max_intermediate_elems,
+    no_dense_intermediate,
+    no_host_transfer,
+)
+from repro.staticcheck.ast_lint import (
+    BVH_NODE_FIELDS,
+    CSR_PRODUCERS,
+    RULES,
+    lint_paths,
+    lint_source,
+)
+from repro.staticcheck.registry import (
+    Audit,
+    REGISTERED_AUDITS,
+    run_registered_audits,
+)
+
+__all__ = [
+    "Finding", "report_dict", "write_report",
+    "assert_no_host_transfers", "audit_jaxpr", "bounded_recompiles",
+    "count_compile_signatures", "iter_eqns", "iter_subjaxprs",
+    "max_intermediate_elems", "no_dense_intermediate", "no_host_transfer",
+    "BVH_NODE_FIELDS", "CSR_PRODUCERS", "RULES", "lint_paths", "lint_source",
+    "Audit", "REGISTERED_AUDITS", "run_registered_audits",
+]

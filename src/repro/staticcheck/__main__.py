@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.staticcheck [paths...] [--jaxpr] [--fast]
+[--json REPORT] [--rules R1,R3]``.
+
+Runs the AST lint over the given paths (default: the installed
+``repro`` package source, i.e. ``src/repro``) and, with ``--jaxpr``,
+the registered jaxpr audits. Prints one ``file:line: [rule] message``
+line per finding, writes the JSON report, and exits nonzero iff any
+finding fired — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import repro
+from repro.staticcheck.ast_lint import RULES, lint_paths
+from repro.staticcheck.findings import write_report
+
+
+def _default_root() -> str:
+    # ``repro`` is a namespace package: locate it via __path__, not __file__.
+    return str(pathlib.Path(next(iter(repro.__path__))).resolve())
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.staticcheck")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated AST rule subset, e.g. R1,R3")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also run the registered jaxpr audits (traces the "
+                         "repo's device pipelines)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller problem sizes for the jaxpr audits")
+    ap.add_argument("--json", default="staticcheck_report.json",
+                    help="JSON report path (default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            ap.error(f"unknown rules {unknown}; available: {sorted(RULES)}")
+
+    paths = args.paths or [_default_root()]
+    findings, checked = lint_paths(paths, rules=rules)
+
+    audit_names: list[str] = []
+    if args.jaxpr:
+        from repro.staticcheck.registry import run_registered_audits
+        jf, audit_names = run_registered_audits(fast=args.fast)
+        findings = findings + jf
+
+    for f in findings:
+        print(f)
+    write_report(args.json, findings, checked_files=checked,
+                 jaxpr_audits=audit_names)
+    summary = (f"staticcheck: {len(findings)} finding(s) over {checked} "
+               f"file(s)")
+    if audit_names:
+        summary += f" + {len(audit_names)} jaxpr audit(s)"
+    print(summary + f"; report -> {args.json}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

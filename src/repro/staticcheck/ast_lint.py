@@ -1,0 +1,383 @@
+"""Layer 2: AST lint over ``src/repro`` — the repo's architecture rules as
+machine-checked gates.
+
+The rules encode contracts that previously lived only in docstrings and
+ROADMAP notes:
+
+* **R1** ``bvh-loop-outside-engine`` — no ``jax.lax.while_loop`` whose
+  cond/body indexes BVH traversal arrays (``rope`` / ``left_child`` /
+  ``right_child`` / ``node_lo`` / ``node_hi``) outside
+  ``core/query.py``. This is the PR 4 engine contract: every traversal
+  goes through the unified query engine, so engine-level improvements
+  (Morton sorting, the Pallas wavefront backend) reach every client.
+  Union-find fixpoints (``dbscan.py`` / ``emst.py``) index no BVH arrays
+  and stay legal.
+* **R2** ``unguarded-shard-map-jit`` — no ``jax.jit`` wrapping a function
+  that opens a ``shard_map`` region, except inside ``core/distributed.py``
+  (whose ``_maybe_jit`` / ``_jit_ok`` gate exists because XLA:CPU's
+  busy-spin collective rendezvous deadlocks jitted shard_map programs
+  when simulated devices outnumber host cores).
+* **R3** ``unchecked-csr-overflow`` — every ``DeviceCsr`` /
+  ``BufferedCsr`` producer call-site must consume ``.overflowed`` (or
+  return the result to its caller, which moves the obligation there), or
+  opt out with ``# staticcheck: overflow-ok``. Fixed-capacity protocols
+  that silently drop hits are how wrong answers happen.
+* **R4** ``unguarded-minimage-fold`` — no ``round(x / period) * period``
+  minimum-image fold without an ``abs(...) > 2 * period`` guard (or
+  ``# staticcheck: minimage-ok``). The f32 trap from ROADMAP item 3:
+  with BIG padding, ``round(BIG/L)*L == BIG`` aliases padded rows to
+  distance zero.
+
+Pragmas: ``# staticcheck: <token>`` on the flagged line (or the line
+directly above) suppresses the matching rule; ``# staticcheck: ignore``
+suppresses any rule on that line.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from repro.staticcheck.findings import Finding
+
+__all__ = [
+    "BVH_NODE_FIELDS",
+    "CSR_PRODUCERS",
+    "RULES",
+    "lint_source",
+    "lint_paths",
+]
+
+# The traversal-structure arrays: a hand-rolled walk must read the node
+# links (rope/children) or the node boxes to descend. ``leaf_perm`` is
+# deliberately NOT here — clients legally reindex results through it
+# (e.g. fdbscan_pair's union bookkeeping) without traversing anything.
+BVH_NODE_FIELDS = frozenset({
+    "rope", "left_child", "right_child", "node_lo", "node_hi",
+})
+
+CSR_PRODUCERS = frozenset({
+    "query_csr", "query_csr_device", "query_csr_buffered",
+    "sharded_query_csr", "sharded_neighbor_csr", "raycast_all",
+})
+
+# Files exempt per rule (matched as posix-path suffixes).
+_ENGINE_FILES = ("core/query.py",)          # R1: the one home of BVH loops
+_JIT_GATE_FILES = ("core/distributed.py",)  # R2: home of _maybe_jit/_jit_ok
+
+_PRAGMA_RE = re.compile(r"#\s*staticcheck:\s*([\w,\s-]+)")
+
+
+def _pragma_lines(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            out[i] = {tok.strip() for tok in m.group(1).replace(",", " ").split()
+                      if tok.strip()}
+    return out
+
+
+def _suppressed(pragmas: dict[int, set[str]], node: ast.AST, token: str) -> bool:
+    lines = range(node.lineno - 1, getattr(node, "end_lineno", node.lineno) + 1)
+    for ln in lines:
+        toks = pragmas.get(ln, ())
+        if token in toks or "ignore" in toks:
+            return True
+    return False
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.while_loop' for an Attribute chain, 'f' for a Name."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _tail(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    par: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            par[child] = node
+    return par
+
+
+def _enclosing_functions(node: ast.AST, parents) -> list[ast.AST]:
+    """FunctionDefs containing ``node``, innermost first."""
+    out = []
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append(cur)
+        cur = parents.get(cur)
+    return out
+
+
+def _matches(path: str, suffixes: tuple[str, ...]) -> bool:
+    p = pathlib.PurePath(path).as_posix()
+    return any(p.endswith(s) for s in suffixes)
+
+
+# --- R1: BVH traversal loops outside the engine -----------------------------
+
+def _resolve_local_fn(name: str, scopes: list[ast.AST]) -> ast.AST | None:
+    """Find a def/lambda bound to ``name`` in the given scopes (innermost
+    first; each scope searched one level deep plus its nested defs)."""
+    for scope in scopes:
+        for node in ast.walk(scope):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == name:
+                return node
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == name:
+                        return node.value
+    return None
+
+
+def _indexes_bvh_fields(fn_node: ast.AST, scopes: list[ast.AST],
+                        _seen: set | None = None) -> bool:
+    """Does this function subscript a BVH node array (``x.rope[...]``),
+    directly or through a locally-defined helper it calls?"""
+    seen = _seen if _seen is not None else set()
+    if id(fn_node) in seen:
+        return False
+    seen.add(id(fn_node))
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Attribute) \
+                and node.value.attr in BVH_NODE_FIELDS:
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            callee = _resolve_local_fn(node.func.id, scopes)
+            if callee is not None and _indexes_bvh_fields(callee, scopes, seen):
+                return True
+    return False
+
+
+def _rule_r1(tree, source, path, pragmas, parents) -> list[Finding]:
+    if _matches(path, _ENGINE_FILES):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _tail(_dotted(node.func)) == "while_loop"):
+            continue
+        if _suppressed(pragmas, node, "bvh-loop-ok"):
+            continue
+        scopes = _enclosing_functions(node, parents) + [tree]
+        hit = False
+        for arg in node.args[:2]:  # cond_fun, body_fun
+            fn_node = arg if isinstance(arg, ast.Lambda) else (
+                _resolve_local_fn(arg.id, scopes)
+                if isinstance(arg, ast.Name) else None)
+            if fn_node is not None and _indexes_bvh_fields(fn_node, scopes):
+                hit = True
+                break
+        if hit:
+            findings.append(Finding(
+                rule="R1-bvh-loop-outside-engine", path=path, line=node.lineno,
+                message=("hand-rolled BVH traversal while_loop (indexes "
+                         "BVH node arrays) outside core/query.py — use the "
+                         "unified query engine")))
+    return findings
+
+
+# --- R2: jax.jit around shard_map drivers -----------------------------------
+
+def _contains_shard_map(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and _tail(_dotted(sub.func)) == "shard_map":
+            return True
+    return False
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    name = _dotted(node)
+    return name in ("jit", "jax.jit")
+
+
+def _decorator_is_jit(dec: ast.AST) -> bool:
+    if _is_jax_jit(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jax_jit(dec.func):
+            return True
+        # partial(jax.jit, ...) / functools.partial(jax.jit, ...)
+        if _tail(_dotted(dec.func)) == "partial" and dec.args \
+                and _is_jax_jit(dec.args[0]):
+            return True
+    return False
+
+
+def _rule_r2(tree, source, path, pragmas, parents) -> list[Finding]:
+    if _matches(path, _JIT_GATE_FILES):
+        return []
+    findings = []
+    shard_fns = {node.name: node for node in ast.walk(tree)
+                 if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and _contains_shard_map(node)}
+
+    def emit(node):
+        if not _suppressed(pragmas, node, "shard-jit-ok"):
+            findings.append(Finding(
+                rule="R2-unguarded-shard-map-jit", path=path, line=node.lineno,
+                message=("jax.jit around a shard_map driver — route through "
+                         "core/distributed.py's _maybe_jit/_jit_ok gate "
+                         "(XLA:CPU collective-rendezvous deadlock)")))
+
+    for name, fn in shard_fns.items():
+        for dec in fn.decorator_list:
+            if _decorator_is_jit(dec):
+                emit(dec)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func) and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Name) and arg.id in shard_fns:
+                emit(node)
+            elif isinstance(arg, (ast.Lambda, ast.Call)) \
+                    and _contains_shard_map(arg):
+                emit(node)
+    return findings
+
+
+# --- R3: CSR overflow must be consumed --------------------------------------
+
+def _rule_r3(tree, source, path, pragmas, parents) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _tail(_dotted(node.func)) in CSR_PRODUCERS):
+            continue
+        if _suppressed(pragmas, node, "overflow-ok"):
+            continue
+        parent = parents.get(node)
+        # return producer(...) / lambda *: producer(...)  -> the obligation
+        # moves to the caller
+        if isinstance(parent, ast.Return) or (
+                isinstance(parent, ast.Lambda) and parent.body is node):
+            continue
+        # producer(...).overflowed  -> consumed on the spot
+        if isinstance(parent, ast.Attribute) and parent.attr == "overflowed":
+            continue
+        consumed = False
+        if isinstance(parent, (ast.Assign, ast.AnnAssign)):
+            targets = parent.targets if isinstance(parent, ast.Assign) \
+                else [parent.target]
+            names = {t.id for t in targets if isinstance(t, ast.Name)}
+            scopes = _enclosing_functions(node, parents) or [tree]
+            for sub in ast.walk(scopes[0]):
+                if isinstance(sub, ast.Attribute) and sub.attr == "overflowed" \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id in names:
+                    consumed = True
+                    break
+        if not consumed:
+            findings.append(Finding(
+                rule="R3-unchecked-csr-overflow", path=path, line=node.lineno,
+                message=(f"{_tail(_dotted(node.func))}(...) result never "
+                         f"consumes .overflowed — check it or annotate "
+                         f"'# staticcheck: overflow-ok'")))
+    return findings
+
+
+# --- R4: guarded minimum-image folds ----------------------------------------
+
+_ROUND_FNS = frozenset({"round", "rint"})
+_ABS_FNS = frozenset({"abs", "absolute", "fabs"})
+
+
+def _is_two(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value in (2, 2.0)
+
+
+def _has_minimage_guard(scope: ast.AST) -> bool:
+    """An ``abs(...) <cmp> 2 * period``-shaped comparison anywhere in scope."""
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Compare):
+            continue
+        has_abs = any(
+            isinstance(sub, ast.Call) and _tail(_dotted(sub.func)) in _ABS_FNS
+            for sub in ast.walk(node))
+        has_2x = any(
+            isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mult)
+            and (_is_two(sub.left) or _is_two(sub.right))
+            for sub in ast.walk(node))
+        if has_abs and has_2x:
+            return True
+    return False
+
+
+def _rule_r4(tree, source, path, pragmas, parents) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _tail(_dotted(node.func)) in _ROUND_FNS
+                and len(node.args) == 1
+                and isinstance(node.args[0], ast.BinOp)
+                and isinstance(node.args[0].op, ast.Div)):
+            continue
+        if _suppressed(pragmas, node, "minimage-ok"):
+            continue
+        period = ast.dump(node.args[0].right)
+        scopes = _enclosing_functions(node, parents)
+        scope = scopes[0] if scopes else tree
+        # It is a min-image fold only if the rounded quotient is folded
+        # back by the SAME period (a `* period` in the same scope).
+        folds_back = any(
+            isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mult)
+            and (ast.dump(sub.left) == period or ast.dump(sub.right) == period)
+            for sub in ast.walk(scope))
+        if folds_back and not _has_minimage_guard(scope):
+            findings.append(Finding(
+                rule="R4-unguarded-minimage-fold", path=path, line=node.lineno,
+                message=("round(x / period) * period min-image fold without "
+                         "an abs(diff) > 2 * period guard — f32 padding "
+                         "aliases to distance 0 (ROADMAP item 3)")))
+    return findings
+
+
+RULES = {
+    "R1": _rule_r1,
+    "R2": _rule_r2,
+    "R3": _rule_r3,
+    "R4": _rule_r4,
+}
+
+
+def lint_source(source: str, path: str = "<string>", *,
+                rules=None) -> list[Finding]:
+    """Lint one source string. ``rules``: iterable of rule keys ("R1"…)
+    to run, default all."""
+    tree = ast.parse(source, filename=path)
+    pragmas = _pragma_lines(source)
+    parents = _parents(tree)
+    findings: list[Finding] = []
+    for key in (rules or sorted(RULES)):
+        findings.extend(RULES[key](tree, source, path, pragmas, parents))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_paths(paths, *, rules=None) -> tuple[list[Finding], int]:
+    """Lint every ``.py`` file under the given files/directories. Returns
+    (findings, number_of_files_checked)."""
+    files: list[pathlib.Path] = []
+    for p in map(pathlib.Path, paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(lint_source(f.read_text(), str(f), rules=rules))
+    return findings, len(files)

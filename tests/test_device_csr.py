@@ -24,6 +24,8 @@ from repro.core.geometry import scene_bounds
 from repro.core.query import (query, query_csr, query_csr_buffered,
                               query_csr_device, ray, within)
 from repro.core.raycast import raycast, raycast_all
+from repro.staticcheck import (assert_no_host_transfers, audit_jaxpr,
+                               max_intermediate_elems, no_dense_intermediate)
 
 
 def _bvh(pts):
@@ -76,8 +78,9 @@ def test_skewed_neighborhoods_match_oracle():
 
 
 def test_skewed_staging_memory_is_not_dense():
-    """Walk the jaxpr of the jitted device path: no intermediate may be
-    (q × max_count)-sized — the scan-then-scatter replaces the dense fill."""
+    """Audit the jaxpr of the jitted device path: no intermediate may be
+    (q × max_count)-sized — the scan-then-scatter replaces the dense fill.
+    (The walker that used to live here is now repro.staticcheck.)"""
     pts, queries, radii = _skewed(n=256, nq=256)
     bvh = _bvh(pts)
     pred = within(jnp.asarray(queries), jnp.asarray(radii))
@@ -86,31 +89,13 @@ def test_skewed_staging_memory_is_not_dense():
     capacity = max_count + 64
     dense_elems = q * max_count             # 65536 — the forbidden budget
 
-    jaxpr = jax.make_jaxpr(
-        lambda b, p: query_csr_device(b, p, capacity, chunk=chunk))(bvh, pred)
-
-    def all_subjaxprs(jxp, acc):
-        acc.append(jxp)
-        for eqn in jxp.eqns:
-            for val in eqn.params.values():
-                items = val if isinstance(val, (tuple, list)) else [val]
-                for it in items:
-                    inner = getattr(it, "jaxpr", it)
-                    if hasattr(inner, "eqns"):
-                        all_subjaxprs(inner, acc)
-        return acc
-
-    biggest = 0
-    for jxp in all_subjaxprs(jaxpr.jaxpr, []):
-        for eqn in jxp.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and getattr(aval, "shape", None):
-                    biggest = max(biggest, int(np.prod(aval.shape)))
+    fn = lambda b, p: query_csr_device(b, p, capacity, chunk=chunk)
+    biggest = max_intermediate_elems(fn, (bvh, pred))
     assert biggest > 0                       # the walker actually saw arrays
-    assert biggest < dense_elems, (
-        f"intermediate of {biggest} elems >= dense (q x max_count) = "
-        f"{dense_elems}: the fill is staging a dense buffer again")
+    findings = audit_jaxpr(fn, (bvh, pred),
+                           [no_dense_intermediate(dense_elems)],
+                           name="query_csr_device")
+    assert findings == [], [str(f) for f in findings]
 
 
 @given(n=st.integers(2, 50), nq=st.integers(0, 40),
@@ -169,7 +154,8 @@ def test_device_csr_overflow_flagged_and_truncated():
 def test_device_csr_jit_traces_without_sync():
     """jax.jit(query_csr_device) must trace (no concretization errors — i.e.
     no int()/.item() between count and fill) and, once compiled, run under
-    ``jax.transfer_guard("disallow")`` with zero host transfers."""
+    ``jax.transfer_guard("disallow")`` with zero host transfers — the
+    warm-up-then-guard dance lives in staticcheck's runtime helper."""
     pts, queries, radii = _skewed(n=64, nq=32)
     bvh = _bvh(pts)
     qd = jax.device_put(jnp.asarray(queries))
@@ -179,11 +165,7 @@ def test_device_csr_jit_traces_without_sync():
     def run(bvh, q, r):
         return query_csr_device(bvh, within(q, r), capacity=96)
 
-    warm = run(bvh, qd, rd)                      # compile outside the guard
-    jax.block_until_ready(warm)
-    with jax.transfer_guard("disallow"):
-        res = run(bvh, qd, rd)
-        jax.block_until_ready(res)
+    res = assert_no_host_transfers(run, bvh, qd, rd)
     assert int(res.total) == 64
 
     # the dynamic path, by contrast, performs its one documented sizing sync
