@@ -74,6 +74,19 @@ _CHILD = textwrap.dedent("""
     bvh = build_bvh(jp, lo, hi)
     buf = query_csr_buffered(bvh, within(jp, eps), capacity=8)
     out["buffered_attempts"] = int(buf.attempts)
+
+    # One traced pass through both entry points: fenced spans around the
+    # fused launch + per-stage spans from the staged pipeline, exported as
+    # Chrome-trace JSON (load in ui.perfetto.dev).
+    from repro.obs import SpanTracer
+    from repro.halos.merge import halo_pipeline_traced
+    tracer = SpanTracer(process_name="distributed_pipeline")
+    sharded_neighbor_csr(jp, eps, capacity=32 * n, mesh=mesh, halo_cap=n,
+                         tracer=tracer)
+    halo_pipeline_traced(jp, vel, eps, 2, mesh=mesh, capacity=n,
+                         halo_cap=n, min_count=2, tracer=tracer)
+    tracer.export({trace_path!r})
+    out["trace_spans"] = sum(1 for e in tracer.events if e["ph"] == "X")
     print("JSON:" + json.dumps(out))
 """)
 
@@ -86,7 +99,8 @@ def _staging_words(q: int, max_count: int, capacity: int, chunk: int) -> dict:
     }
 
 
-def main(fast: bool = False, out_path: str = "BENCH_distributed.json") -> None:
+def main(fast: bool = False, out_path: str = "BENCH_distributed.json",
+         trace_path: str = "trace_distributed.json") -> None:
     from benchmarks.common import emit
 
     ndev = 2 if fast else 4
@@ -97,7 +111,7 @@ def main(fast: bool = False, out_path: str = "BENCH_distributed.json") -> None:
          str(pathlib.Path(__file__).resolve().parent.parent),
          env.get("PYTHONPATH", "")])
     env.pop("XLA_FLAGS", None)
-    code = _CHILD.format(ndev=ndev, n=n)
+    code = _CHILD.format(ndev=ndev, n=n, trace_path=trace_path)
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, env=env, timeout=1800)
     if proc.returncode != 0:
@@ -126,6 +140,9 @@ def main(fast: bool = False, out_path: str = "BENCH_distributed.json") -> None:
              derived=f"dense_words={w['dense_gather']};"
                      f"device_words={w['device_csr']}")
     results["distributed/staging_words"] = {"skewed": skew, "uniform": unif}
+
+    emit("distributed/trace_spans", 0.0,
+         derived=f"spans={child['trace_spans']};file={trace_path}")
 
     pathlib.Path(out_path).write_text(json.dumps(results, indent=2))
 

@@ -19,12 +19,13 @@ def main() -> None:
 
     from benchmarks import (distributed_pipeline, fig1_insitu, fig4_timeline,
                             halo_pipeline, kernels_micro, query_micro,
-                            table1_morton)
+                            roofline_report, table1_morton)
 
     suites = {
         "table1": lambda: table1_morton.main(n=(1 << 15) if args.fast else (1 << 18)),
         "fig4": lambda: fig4_timeline.ladder(n=512 if args.fast else 2048),
-        "fig1": fig1_insitu.main,
+        "fig1": lambda: fig1_insitu.main(fast=args.fast),
+        "roofline": lambda: roofline_report.main(fast=args.fast),
         "kernels": kernels_micro.main,
         "halos": lambda: halo_pipeline.main(fast=args.fast),
         "query": lambda: query_micro.main(fast=args.fast),

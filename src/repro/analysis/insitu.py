@@ -155,25 +155,50 @@ def router_cluster_stats(params: dict, cfg: InsituConfig, step: int,
 
 
 class InsituAnalyzer:
-    """Hooked into the supervisor loop: runs at the configured cadence."""
+    """Hooked into the supervisor loop: runs at the configured cadence.
 
-    def __init__(self, cfg: InsituConfig):
+    ``tracer`` (a ``repro.obs.SpanTracer``) puts each analysis under a
+    fenced ``insitu[step]`` span with one child span per stage (cluster
+    stats, router stats, host readback), so a Perfetto trace of the
+    training loop shows exactly what the in-situ cadence costs — the
+    quantity the paper's §2 "analysis at full cadence" claim is about."""
+
+    def __init__(self, cfg: InsituConfig, tracer=None):
         self.cfg = cfg
+        self.tracer = tracer
         self.history: list[tuple[int, dict]] = []
 
-    def maybe_run(self, params: dict, step: int) -> dict[str, Any]:
-        if step % self.cfg.cadence != 0:
-            return {}
+    def _analyze(self, params: dict, step: int) -> dict[str, jax.Array]:
+        from repro.obs.trace import traced
+
         if self.cfg.mode == "simulation":
             # Simulation state (the HACC workload): full halo-stats mode.
             eps = params.get("eps", hacc_benchmark_epsilon(
                 1.0, int(params["positions"].shape[0])))
-            stats = dict(simulation_halo_stats(
+            return dict(traced(
+                self.tracer, "insitu/halo_stats", simulation_halo_stats,
                 params["positions"], params["velocities"], self.cfg, eps,
                 step))
+        stats = dict(traced(self.tracer, "insitu/embed_stats",
+                            embedding_cluster_stats, params, self.cfg, step))
+        stats.update(traced(self.tracer, "insitu/router_stats",
+                            router_cluster_stats, params, self.cfg, step))
+        return stats
+
+    def maybe_run(self, params: dict, step: int) -> dict[str, Any]:
+        from repro.obs.trace import traced
+
+        if step % self.cfg.cadence != 0:
+            return {}
+        if self.tracer is None:
+            stats = self._analyze(params, step)
+            host = {k: float(np.asarray(v)) for k, v in stats.items()}
         else:
-            stats = dict(embedding_cluster_stats(params, self.cfg, step))
-            stats.update(router_cluster_stats(params, self.cfg, step))
-        host = {k: float(np.asarray(v)) for k, v in stats.items()}
+            with self.tracer.span("insitu", step=step, mode=self.cfg.mode):
+                stats = self._analyze(params, step)
+                host = traced(
+                    self.tracer, "insitu/host_readback",
+                    lambda: {k: float(np.asarray(v))
+                             for k, v in stats.items()})
         self.history.append((step, host))
         return host

@@ -312,17 +312,32 @@ def _neighbor_csr_sharded(points, eps, capacity, halo_cap, axis, mesh_ref,
 def sharded_neighbor_csr(points: jax.Array, eps, *, capacity: int, mesh: Mesh,
                          axis: str = "data", halo_cap: int = 512,
                          chunk: int = 32, backend: str = "stackless",
-                         use_64bit: bool = True) -> ShardedCsr:
+                         use_64bit: bool = True, tracer=None) -> ShardedCsr:
     """The reusable sharded-query layer, end to end: slab-sharded points in,
     per-shard ε-neighbor CSR out (GLOBAL point ids, self included), computed
     as per-shard BVH build → ppermute ghost exchange → device-resident CSR —
     one shard_map region, zero host round-trips.
 
     ``points``: (n_total, d) pre-sorted by x (``slab_partition``), n_total
-    divisible by the axis size. ``capacity`` bounds hits PER SHARD."""
-    offsets, indices, total, ovf = _neighbor_csr_sharded(
-        points, eps, int(capacity), halo_cap, axis, _mesh_ref(mesh),
-        chunk, backend, use_64bit)
+    divisible by the axis size. ``capacity`` bounds hits PER SHARD.
+
+    ``tracer`` (a ``repro.obs.SpanTracer``) wraps the fused launch in one
+    fenced span — the exchange/build/query phases share a single shard_map
+    region by design, so the host sees them as one launch — and samples the
+    per-shard hit totals onto a counter track after the fence."""
+    if tracer is None:
+        offsets, indices, total, ovf = _neighbor_csr_sharded(
+            points, eps, int(capacity), halo_cap, axis, _mesh_ref(mesh),
+            chunk, backend, use_64bit)
+        return ShardedCsr(offsets=offsets, indices=indices, total=total,
+                          overflowed=ovf)
+    with tracer.span("sharded_neighbor_csr", n=int(points.shape[0]),
+                     shards=int(mesh.shape[axis]), backend=backend) as sp:
+        offsets, indices, total, ovf = sp.fence(_neighbor_csr_sharded(
+            points, eps, int(capacity), halo_cap, axis, _mesh_ref(mesh),
+            chunk, backend, use_64bit))
+    tracer.counter("csr_hits", total=int(jnp.sum(total)),
+                   overflowed=int(ovf))
     return ShardedCsr(offsets=offsets, indices=indices, total=total,
                       overflowed=ovf)
 
@@ -423,10 +438,23 @@ def _dbscan_sharded(points, eps, min_pts, halo_cap, axis, mesh_ref, max_rounds):
 
 def dbscan_distributed(points: jax.Array, eps, min_pts: int, *, mesh: Mesh,
                        axis: str = "data", halo_cap: int = 512,
-                       max_rounds: int = 64) -> DistDbscanResult:
+                       max_rounds: int = 64, tracer=None) -> DistDbscanResult:
     """points: (n_total, d), n_total divisible by the axis size, pre-sorted
-    by x (``slab_partition``) so shard slabs are contiguous."""
-    labels, core, rounds, ovf = _dbscan_sharded(
-        points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds)
+    by x (``slab_partition``) so shard slabs are contiguous.
+
+    ``tracer`` (a ``repro.obs.SpanTracer``) wraps the fused
+    exchange + core-test + union-fixpoint launch in one fenced span and
+    records the merge round count / halo overflow after the fence."""
+    if tracer is None:
+        labels, core, rounds, ovf = _dbscan_sharded(
+            points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds)
+        return DistDbscanResult(labels=labels, core_mask=core, rounds=rounds,
+                                halo_overflow=ovf)
+    with tracer.span("dbscan_distributed", n=int(points.shape[0]),
+                     shards=int(mesh.shape[axis]), min_pts=int(min_pts)) as sp:
+        labels, core, rounds, ovf = sp.fence(_dbscan_sharded(
+            points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds))
+    tracer.counter("dbscan_rounds", rounds=int(rounds),
+                   halo_overflow=int(ovf))
     return DistDbscanResult(labels=labels, core_mask=core, rounds=rounds,
                             halo_overflow=ovf)

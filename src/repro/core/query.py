@@ -61,6 +61,7 @@ import jax.numpy as jnp
 from repro.core.bvh import Bvh, SENTINEL
 from repro.core.geometry import aabb_aabb_dist2, point_aabb_dist2
 from repro.core.morton import morton32, normalize_points, sort_by_morton32
+from repro.obs.stats import TraversalStats
 
 __all__ = [
     "Within", "IntersectsBox", "Nearest", "Ray",
@@ -220,13 +221,132 @@ def _one_stack(bvh: Bvh, q, node_fn, leaf_fn, carry0):
     return carry
 
 
+# --- stats-instrumented twins of the traversal cores ------------------------
+#
+# The ``with_stats=`` paths below are SEPARATE functions, not flags inside
+# ``_one_stackless``/``_one_stack``: the stats-off path must stage the exact
+# jaxpr it staged before the obs layer existed (machine-checked by the
+# ``stats_path_identity`` audit in ``repro.staticcheck``), so the original
+# cores stay untouched and the instrumented twins pay for their counters only
+# when asked for.
+
+def _node_depths(bvh: Bvh) -> jax.Array:
+    """Per-node tree depth (root = 0), propagated top-down one level per
+    iteration; ``_STACK_DEPTH`` iterations bound any tree this engine can
+    traverse. Traced once per stats-on query batch (outside the vmap)."""
+    n = bvh.num_leaves
+    ids = jnp.arange(max(n - 1, 0), dtype=jnp.int32)
+
+    def body(_, depth):
+        d = depth[ids] + 1
+        depth = depth.at[bvh.left_child].set(d)
+        depth = depth.at[bvh.right_child].set(d)
+        return depth
+
+    depth0 = jnp.zeros((2 * n - 1,), jnp.int32)
+    return jax.lax.fori_loop(0, _STACK_DEPTH, body, depth0)
+
+
+def _one_stackless_stats(bvh: Bvh, q, node_fn, leaf_fn, carry0, start, depths):
+    """``_one_stackless`` with traversal counters threaded through the loop
+    carry. Returns ``(carry, (nodes, aabb_tests, leaf_tests, max_depth,
+    early_exit))`` — all device scalars."""
+    n = bvh.num_leaves
+
+    def cond(state):
+        node, _, done = state[0], state[1], state[2]
+        return (node != SENTINEL) & ~done
+
+    def body(state):
+        node, carry, done, nodes, aabb, leaf, maxd = state
+        is_leaf = node >= n - 1
+        sorted_idx = node - (n - 1)
+        carry_leaf, done_leaf = leaf_fn(
+            q, carry, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)], sorted_idx)
+        next_leaf = bvh.rope[node]
+
+        hit = node_fn(q, carry, node)
+        node_c = jnp.clip(node, 0, n - 2)
+        next_internal = jnp.where(hit, bvh.left_child[node_c], bvh.rope[node])
+
+        nodes = nodes + 1
+        aabb = aabb + (~is_leaf).astype(jnp.int32)
+        leaf = leaf + is_leaf.astype(jnp.int32)
+        maxd = jnp.maximum(maxd, depths[node])
+
+        carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
+        done = jnp.where(is_leaf, done | done_leaf, done)
+        node = jnp.where(is_leaf, next_leaf, next_internal)
+        return node, carry, done, nodes, aabb, leaf, maxd
+
+    z = jnp.int32(0)
+    _, carry, done, nodes, aabb, leaf, maxd = jax.lax.while_loop(
+        cond, body, (start, carry0, jnp.bool_(False), z, z, z, z))
+    return carry, (nodes, aabb, leaf, maxd, done)
+
+
+def _one_stack_stats(bvh: Bvh, q, node_fn, leaf_fn, carry0):
+    """``_one_stack`` with counters; ``max_depth`` is the stack's high-water
+    pointer (the quantity that overflows ``_STACK_DEPTH``)."""
+    n = bvh.num_leaves
+    stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
+
+    def cond(state):
+        sp, done = state[0], state[3]
+        return (sp > 0) & ~done
+
+    def body(state):
+        sp, stack, carry, done, nodes, aabb, leaf, maxsp = state
+        node = stack[sp - 1]
+        sp = sp - 1
+        is_leaf = node >= n - 1
+        sorted_idx = node - (n - 1)
+
+        carry_leaf, done_leaf = leaf_fn(
+            q, carry, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)], sorted_idx)
+
+        hit = node_fn(q, carry, node) & ~is_leaf
+        node_c = jnp.clip(node, 0, n - 2)
+        stack = stack.at[sp].set(jnp.where(hit, bvh.right_child[node_c], stack[sp]))
+        sp_r = sp + hit.astype(jnp.int32)
+        stack = stack.at[sp_r].set(jnp.where(hit, bvh.left_child[node_c], stack[sp_r]))
+        sp = sp_r + hit.astype(jnp.int32)
+
+        nodes = nodes + 1
+        aabb = aabb + (~is_leaf).astype(jnp.int32)
+        leaf = leaf + is_leaf.astype(jnp.int32)
+        maxsp = jnp.maximum(maxsp, sp)
+
+        carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
+        done = done | (is_leaf & done_leaf)
+        return sp, stack, carry, done, nodes, aabb, leaf, maxsp
+
+    z = jnp.int32(0)
+    _, _, carry, done, nodes, aabb, leaf, maxsp = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(1), stack0, carry0, jnp.bool_(False), z, z, z, jnp.int32(1)))
+    return carry, (nodes, aabb, leaf, maxsp, done)
+
+
+def _stats_from_raw(raw, callback_hits=None) -> TraversalStats:
+    """Assemble the (q,)-shaped raw counter columns the vmapped stats cores
+    return into a :class:`TraversalStats`."""
+    nodes, aabb, leaf, maxd, done = raw
+    if callback_hits is None:
+        callback_hits = jnp.zeros_like(nodes)
+    return TraversalStats(nodes_visited=nodes, aabb_tests=aabb,
+                          leaf_tests=leaf, callback_hits=callback_hits,
+                          early_exits=done, max_depth=maxd)
+
+
 def _broadcast_carries(carry_init, q_count: int):
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x, (q_count,) + jnp.shape(x)), carry_init)
 
 
 def traverse(bvh: Bvh, qdata, node_fn: Callable, leaf_fn: Callable, carry_init,
-             *, backend: str = "stackless", start_nodes: jax.Array | None = None):
+             *, backend: str = "stackless", start_nodes: jax.Array | None = None,
+             with_stats: bool = False):
     """Generic batched traversal: the substrate every protocol builds on.
 
     ``qdata``: pytree of per-query arrays (leading dim q); each query's
@@ -234,6 +354,13 @@ def traverse(bvh: Bvh, qdata, node_fn: Callable, leaf_fn: Callable, carry_init,
     decides descent (may read the carry — e.g. best-so-far pruning);
     ``leaf_fn(q, carry, obj_idx, sorted_idx) -> (carry, done)`` runs fused
     on every reached leaf. ``backend``: ``stackless`` | ``stack``.
+
+    ``with_stats=True`` routes through the instrumented twin cores and
+    returns ``(carries, TraversalStats)`` — the stats stay on device and
+    vmap/shard_map like any carry. ``callback_hits`` is zero here (the
+    generic driver has no hit notion; the engine protocols fill it in).
+    With the default ``with_stats=False`` this stages the identical jaxpr
+    it did before the obs layer existed.
     """
     leaves = jax.tree.leaves(qdata)
     if not leaves:
@@ -244,12 +371,24 @@ def traverse(bvh: Bvh, qdata, node_fn: Callable, leaf_fn: Callable, carry_init,
     if backend == "stackless":
         if start_nodes is None:
             start_nodes = jnp.zeros((q_count,), jnp.int32)
+        if with_stats:
+            depths = _node_depths(bvh)
+            out, raw = jax.vmap(
+                lambda q, s, c: _one_stackless_stats(
+                    bvh, q, node_fn, leaf_fn, c, s, depths)
+            )(qdata, start_nodes, carries)
+            return out, _stats_from_raw(raw)
         return jax.vmap(
             lambda q, s, c: _one_stackless(bvh, q, node_fn, leaf_fn, c, s)
         )(qdata, start_nodes, carries)
     if backend == "stack":
         if start_nodes is not None:
             raise ValueError("start_nodes is a stackless/pair-backend feature")
+        if with_stats:
+            out, raw = jax.vmap(
+                lambda q, c: _one_stack_stats(bvh, q, node_fn, leaf_fn, c)
+            )(qdata, carries)
+            return out, _stats_from_raw(raw)
         return jax.vmap(
             lambda q, c: _one_stack(bvh, q, node_fn, leaf_fn, c)
         )(qdata, carries)
@@ -451,7 +590,8 @@ def _pred_centers(pred):
     return pred.origins
 
 
-def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries):
+def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries,
+                   with_stats=False):
     geom, node_fn, leaf_aux = _spatial_fns(bvh, pred)
     q_count = jax.tree.leaves(geom)[0].shape[0]
     qidx = jnp.arange(q_count, dtype=jnp.int32)
@@ -460,6 +600,27 @@ def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries):
     if sort_queries:
         perm = query_sort_permutation(bvh, _pred_centers(pred))
         qdata = _apply_sort(perm, qdata)
+
+    if with_stats:
+        # Augmented carry (user_carry, n_hits): the engine counts fused-
+        # callback invocations itself, then grafts the column into the
+        # stats record the traversal cores produce.
+        def leaf_fn_s(q, carry_h, obj, sorted_idx):
+            carry, nh = carry_h
+            d2, hit = leaf_aux(q, sorted_idx)
+            carry2, done2 = callback(carry, q[0], obj, d2)
+            carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
+            return (carry, nh + hit.astype(jnp.int32)), hit & done2
+
+        (out, hits), stats = traverse(
+            bvh, qdata, node_fn, leaf_fn_s, (carry_init, jnp.int32(0)),
+            backend=backend, with_stats=True)
+        stats = stats._replace(callback_hits=hits)
+        if sort_queries:
+            inv = _invert_perm(perm)
+            out = _apply_sort(inv, out)
+            stats = TraversalStats(*_apply_sort(inv, tuple(stats)))
+        return out, stats
 
     def leaf_fn(q, carry, obj, sorted_idx):
         d2, hit = leaf_aux(q, sorted_idx)
@@ -473,13 +634,14 @@ def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries):
     return out
 
 
-def _pair_query(bvh, pred, callback, carry_init):
+def _pair_query(bvh, pred, callback, carry_init, with_stats=False):
     """Pair traversal (§4.2.3): predicates must be ``within`` over the very
     points the tree indexes; query k starts at ``rope[leaf_k]`` so it
     visits exactly the leaves AFTER k in Morton order — each unordered
     pair once. Carries are returned in SORTED (Morton) query order; row k
     belongs to original point ``bvh.leaf_perm[k]`` (the index passed to
-    the callback as ``query_idx``)."""
+    the callback as ``query_idx``). With ``with_stats`` the stats rows are
+    in the same sorted order as the carries."""
     if not isinstance(pred, Within):
         raise TypeError("backend='pair' requires a within(...) predicate over "
                         "the indexed points")
@@ -492,6 +654,19 @@ def _pair_query(bvh, pred, callback, carry_init):
     # Query k = sorted point k; its query_idx is the ORIGINAL index leaf_perm[k].
     qdata = (bvh.leaf_perm,) + _apply_sort(bvh.leaf_perm, geom)
     starts = bvh.rope[jnp.arange(n, dtype=jnp.int32) + (n - 1)]
+
+    if with_stats:
+        def leaf_fn_s(q, carry_h, obj, sorted_idx):
+            carry, nh = carry_h
+            d2, hit = leaf_aux(q, sorted_idx)
+            carry2, done2 = callback(carry, q[0], obj, d2)
+            carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
+            return (carry, nh + hit.astype(jnp.int32)), hit & done2
+
+        (out, hits), stats = traverse(
+            bvh, qdata, node_fn, leaf_fn_s, (carry_init, jnp.int32(0)),
+            backend="stackless", start_nodes=starts, with_stats=True)
+        return out, stats._replace(callback_hits=hits)
 
     def leaf_fn(q, carry, obj, sorted_idx):
         d2, hit = leaf_aux(q, sorted_idx)
@@ -643,7 +818,7 @@ def _ray_query(bvh, pred: Ray, callback, sort_queries):
 
 def query(bvh: Bvh, predicates, callback: Callable | None = None,
           carry_init=None, *, backend: str = "stackless",
-          sort_queries: bool = False):
+          sort_queries: bool = False, with_stats: bool = False):
     """The single entry point (§4.1): dispatch ``predicates`` against the
     tree, fusing ``callback`` into the traversal.
 
@@ -661,7 +836,18 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
     ``sort_queries=True`` Morton-sorts queries against the tree's scene
     bounds before traversal and unsorts the outputs (§4.2.2) — results are
     positionally identical, traversal is more coherent.
+
+    ``with_stats=True`` (spatial predicates with a callback only) returns
+    ``(result, TraversalStats)`` — per-query device-side traversal
+    counters, see ``repro.obs.stats``. Off by default; the default path
+    stages the identical jaxpr it did before the obs layer existed.
     """
+    if with_stats and (isinstance(predicates, Nearest)
+                       or (isinstance(predicates, Ray) and callback is None)):
+        raise ValueError(
+            "with_stats instruments the spatial traversal cores; the "
+            "nearest / nearest-hit-ray protocols run on the priority-queue "
+            "substrate, which has no stats threading")
     if isinstance(predicates, Nearest):
         return _nearest_query(bvh, predicates, callback, carry_init, sort_queries)
     if isinstance(predicates, Ray):
@@ -670,7 +856,7 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
         if backend == "pair":
             raise ValueError("backend='pair' is a within() self-join")
         return _spatial_query(bvh, predicates, callback, carry_init, backend,
-                              sort_queries)
+                              sort_queries, with_stats)
     if not isinstance(predicates, (Within, IntersectsBox)):
         raise TypeError(f"unknown predicate type {type(predicates).__name__}")
     if callback is None:
@@ -680,9 +866,9 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
         if sort_queries:
             raise ValueError("backend='pair' queries are inherently "
                              "Morton-sorted; sort_queries does not apply")
-        return _pair_query(bvh, predicates, callback, carry_init)
+        return _pair_query(bvh, predicates, callback, carry_init, with_stats)
     return _spatial_query(bvh, predicates, callback, carry_init, backend,
-                          sort_queries)
+                          sort_queries, with_stats)
 
 
 # ---------------------------------------------------------------------------
@@ -690,10 +876,12 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
 # ---------------------------------------------------------------------------
 
 def query_count(bvh: Bvh, predicates, *, stop_at: int | None = None,
-                backend: str = "stackless", sort_queries: bool = False) -> jax.Array:
+                backend: str = "stackless", sort_queries: bool = False,
+                with_stats: bool = False) -> jax.Array:
     """Per-query intersection counts. ``stop_at`` enables early termination
     (§4.1.2): counting stops (and saturates) at ``stop_at`` — DBSCAN's
-    minPts core test needs no exact counts beyond it."""
+    minPts core test needs no exact counts beyond it. ``with_stats=True``
+    returns ``(counts, TraversalStats)``."""
     if backend == "pair":
         raise ValueError("output protocols are per-query; the pair backend's "
                          "half-counts need a callback (use query(...))")
@@ -704,7 +892,7 @@ def query_count(bvh: Bvh, predicates, *, stop_at: int | None = None,
         return count, done
 
     return query(bvh, predicates, cb, jnp.int32(0), backend=backend,
-                 sort_queries=sort_queries)
+                 sort_queries=sort_queries, with_stats=with_stats)
 
 
 def query_fixed(bvh: Bvh, predicates, capacity: int, *,

@@ -52,6 +52,7 @@ __all__ = [
     "finalize_rmax",
     "halo_catalog_sharded",
     "halo_pipeline_sharded",
+    "halo_pipeline_traced",
 ]
 
 
@@ -286,7 +287,7 @@ def halo_pipeline_sharded(points: jax.Array, velocities: jax.Array, eps,
                           max_rounds: int = 64, backend: str = "auto",
                           so_delta: float | None = None,
                           box_volume: float = 1.0, so_r_max: float = 0.25,
-                          so_iters: int = 20) -> HaloPipelineResult:
+                          so_iters: int = 20, tracer=None) -> HaloPipelineResult:
     """The paper's exascale pipeline in ONE ``shard_map`` region: per-shard
     BVH build → ε-ghost exchange → distributed DBSCAN → catalog merge →
     max-radius pass → (optionally, with ``so_delta``) SO masses — all engine
@@ -295,10 +296,69 @@ def halo_pipeline_sharded(points: jax.Array, velocities: jax.Array, eps,
     Inputs are (n_total, d) slab-partitioned like ``dbscan_distributed``'s
     (pre-sorted by x, n_total divisible by the axis size). The catalog is
     replicated; ``labels``/``core_mask``/``catalog.particle_halo`` are
-    sharded like the particles."""
+    sharded like the particles.
+
+    ``tracer`` (a ``repro.obs.SpanTracer``) wraps the launch in ONE fenced
+    span — fusion means the host cannot see stage boundaries; for a
+    per-stage trace use :func:`halo_pipeline_traced` (bit-identical staged
+    composition, see ``tests/test_sharded_pipeline.py``)."""
     from repro.core.distributed import _mesh_ref
 
-    return _pipeline_sharded(
-        points, velocities, eps, min_pts, int(capacity), halo_cap, axis,
-        _mesh_ref(mesh), min_count, float(particle_mass), max_rounds,
-        backend, so_delta, float(box_volume), float(so_r_max), so_iters)
+    def run():
+        return _pipeline_sharded(
+            points, velocities, eps, min_pts, int(capacity), halo_cap, axis,
+            _mesh_ref(mesh), min_count, float(particle_mass), max_rounds,
+            backend, so_delta, float(box_volume), float(so_r_max), so_iters)
+
+    if tracer is None:
+        return run()
+    with tracer.span("halo_pipeline_sharded", n=int(points.shape[0]),
+                     shards=int(mesh.shape[axis]), fused=True) as sp:
+        res = sp.fence(run())
+    tracer.counter("halo_pipeline", rounds=int(res.rounds),
+                   num_halos=int(res.catalog.num_halos),
+                   halo_overflow=int(res.halo_overflow))
+    return res
+
+
+def halo_pipeline_traced(points: jax.Array, velocities: jax.Array, eps,
+                         min_pts: int, *, mesh: Mesh, axis: str = "data",
+                         capacity: int, halo_cap: int = 512,
+                         min_count: int = 2, particle_mass: float = 1.0,
+                         max_rounds: int = 64, backend: str = "auto",
+                         so_delta: float | None = None,
+                         box_volume: float = 1.0, so_r_max: float = 0.25,
+                         so_iters: int = 20, tracer=None) -> HaloPipelineResult:
+    """The STAGED pipeline — ``dbscan_distributed`` → ``halo_catalog_sharded``
+    → ``so_masses`` as separate launches, each in its own fenced span, so a
+    Perfetto trace shows where the time goes. Produces the same result as
+    the fused :func:`halo_pipeline_sharded` (the equivalence the sharded-
+    pipeline tests assert), at the cost of host fences between stages —
+    this is the observability build, not the production fast path."""
+    from repro.core.distributed import dbscan_distributed
+    from repro.halos.so_mass import so_masses
+    from repro.obs.trace import traced
+
+    def run():
+        dd = dbscan_distributed(points, eps, min_pts, mesh=mesh, axis=axis,
+                                halo_cap=halo_cap, max_rounds=max_rounds,
+                                tracer=tracer)
+        cat = traced(tracer, "halo_catalog_sharded", halo_catalog_sharded,
+                     points, velocities, dd.labels, mesh=mesh, axis=axis,
+                     capacity=int(capacity), min_count=min_count,
+                     particle_mass=particle_mass, backend=backend)
+        so = None
+        if so_delta is not None:
+            so = traced(tracer, "so_masses", so_masses, points, cat.center,
+                        cat.count > 0, delta=so_delta,
+                        particle_mass=particle_mass, box_volume=box_volume,
+                        r_max=so_r_max, iters=so_iters)
+        return HaloPipelineResult(
+            labels=dd.labels, core_mask=dd.core_mask, rounds=dd.rounds,
+            halo_overflow=dd.halo_overflow, catalog=cat, so=so)
+
+    if tracer is None:
+        return run()
+    with tracer.span("halo_pipeline_traced", n=int(points.shape[0]),
+                     shards=int(mesh.shape[axis]), fused=False):
+        return run()

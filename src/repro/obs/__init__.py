@@ -1,0 +1,23 @@
+"""Observability layer: device-side traversal stats, host-side span
+tracing with Chrome-trace export, and a unifying metrics registry.
+
+See ``obs/stats.py`` (TraversalStats), ``obs/trace.py`` (SpanTracer /
+traced), ``obs/metrics.py`` (MetricsRegistry). All three are strictly
+opt-in: the engine's stats-off path stages the identical jaxpr it did
+before this package existed (machine-checked by
+``repro.staticcheck``'s ``stats_path_identity`` audit).
+"""
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stats import TraversalStats
+from repro.obs.trace import (Span, SpanTracer, load_chrome_trace, span_tree,
+                             traced)
+
+__all__ = [
+    "TraversalStats",
+    "Span",
+    "SpanTracer",
+    "traced",
+    "load_chrome_trace",
+    "span_tree",
+    "MetricsRegistry",
+]

@@ -1,0 +1,118 @@
+"""Metrics registry: one sink for the observability crumbs the engine
+already produces.
+
+The repo grew per-protocol observability organically — ``DeviceCsr`` /
+``BufferedCsr`` overflow flags and retry ``attempts``, ``GridAutoInfo``
+capacity retries, ``count_compile_signatures`` recompile counts, the halo
+exchange's fixed payload buffers. This module unifies them: one
+:class:`MetricsRegistry` that any pipeline can ``record`` into (scalars
+or device arrays, including shard_map-sharded outputs — conversion to
+host floats happens lazily at :meth:`summary` time, so recording costs no
+sync), plus :meth:`observe` which knows the repo's observability-bearing
+result types and explodes them into named series.
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Iterable
+
+import numpy as np
+
+__all__ = ["MetricsRegistry"]
+
+
+class MetricsRegistry:
+    """Append-only metric sink with lazy host aggregation.
+
+    ``record(name, value)`` accepts python numbers, numpy arrays and jax
+    arrays (sharded arrays included — ``np.asarray`` gathers at summary
+    time, not record time). ``summary()`` aggregates each series over the
+    FLATTENED elements of everything recorded under that name: per-shard
+    columns recorded from a shard_map driver therefore aggregate to the
+    global count/sum/max without any explicit collective.
+    """
+
+    def __init__(self):
+        self._series: dict[str, list[Any]] = defaultdict(list)
+
+    # --- recording ----------------------------------------------------------
+
+    def record(self, name: str, value) -> None:
+        self._series[name].append(value)
+
+    def record_recompiles(self, name: str, sweep: Iterable[tuple]) -> None:
+        """Record the number of distinct compiled shapes a workload sweep
+        would cost (the serving tier's bucketing premise)."""
+        from repro.staticcheck.jaxpr_audit import count_compile_signatures
+
+        self.record(f"{name}/compile_signatures",
+                    count_compile_signatures(sweep))
+
+    def observe(self, name: str, obj) -> None:
+        """Explode a known observability-bearing result into named series.
+
+        Understands ``DeviceCsr`` / ``BufferedCsr`` / ``ShardedCsr`` (hit
+        totals, overflow flags, retry attempts), ``GridAutoInfo`` (capacity
+        retries), ``HaloExchange`` (ghost payload volume and overflow) and
+        ``TraversalStats`` (the device-side counter totals). Anything else
+        falls back to ``record(name, obj)``.
+        """
+        from repro.core.distributed import HaloExchange, ShardedCsr
+        from repro.core.fdbscan_grid import GridAutoInfo
+        from repro.core.query import BufferedCsr, DeviceCsr
+        from repro.obs.stats import TraversalStats
+
+        if isinstance(obj, DeviceCsr):
+            self.record(f"{name}/total", obj.total)
+            self.record(f"{name}/overflowed", obj.overflowed)
+        elif isinstance(obj, BufferedCsr):
+            self.record(f"{name}/total", obj.offsets[-1])
+            self.record(f"{name}/attempts", obj.attempts)
+            self.record(f"{name}/overflowed", obj.overflowed)
+        elif isinstance(obj, ShardedCsr):
+            self.record(f"{name}/total", obj.total)       # per-shard column
+            self.record(f"{name}/overflowed", obj.overflowed)
+        elif isinstance(obj, GridAutoInfo):
+            self.record(f"{name}/attempts", obj.attempts)
+            self.record(f"{name}/capacity", obj.capacity)
+            self.record(f"{name}/overflowed", obj.overflowed)
+        elif isinstance(obj, HaloExchange):
+            ghosts = obj.halo_valid.astype(np.int32).sum() \
+                if isinstance(obj.halo_valid, np.ndarray) else \
+                obj.halo_valid.sum()
+            self.record(f"{name}/ghost_rows", ghosts)
+            self.record(f"{name}/payload_bytes",
+                        obj.halo_pts.size * obj.halo_pts.dtype.itemsize
+                        + obj.halo_gid.size * obj.halo_gid.dtype.itemsize)
+            self.record(f"{name}/overflowed", obj.overflow)
+        elif isinstance(obj, TraversalStats):
+            for key, val in obj.totals().items():
+                self.record(f"{name}/{key}", val)
+        else:
+            self.record(name, obj)
+
+    # --- aggregation --------------------------------------------------------
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        """name -> {records, count, sum, min, max, last} over the flattened
+        elements of every value recorded under the name. This is where
+        device (possibly sharded) arrays are fetched to host."""
+        out: dict[str, dict[str, float]] = {}
+        for name, values in self._series.items():
+            flat = np.concatenate(
+                [np.ravel(np.asarray(v)).astype(np.float64) for v in values])
+            out[name] = {
+                "records": len(values),
+                "count": int(flat.size),
+                "sum": float(flat.sum()),
+                "min": float(flat.min()),
+                "max": float(flat.max()),
+                "last": float(flat[-1]),
+            }
+        return out
+
+    def to_json(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.summary(), f, indent=2, sort_keys=True)
+        return path

@@ -1,0 +1,81 @@
+"""Device-side traversal statistics (the paper's measurement discipline,
+made a first-class output).
+
+Every §4 win in the source paper — early termination, stackless ropes,
+pair traversal — was found by MEASURING traversal behaviour, not guessing.
+``TraversalStats`` is the unified record of that behaviour for one query
+batch: per-query counters accumulated INSIDE the traversal loop carry, so
+they live on device, jit-trace cleanly, and compose with ``vmap`` /
+``shard_map`` like any other engine output (reduce across shards with
+:meth:`TraversalStats.psum`).
+
+The engine (``core/query.py``) threads these through all three backends
+behind ``with_stats=``; the stats-OFF path stages the exact pre-obs jaxpr
+(machine-checked by the ``stats_path_identity`` audit in
+``repro.staticcheck.registry``), so observability is zero-cost when
+disabled.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TraversalStats"]
+
+
+class TraversalStats(NamedTuple):
+    """Per-query traversal counters (all fields shaped ``(q,)``).
+
+    ``nodes_visited``
+        traversal-loop iterations (internal nodes walked + leaves reached).
+    ``aabb_tests``
+        internal-node bounding-volume tests (the descend/skip decisions).
+    ``leaf_tests``
+        leaf bounding-volume tests — for point leaves this is the exact
+        predicate test, so ``leaf_tests >= callback_hits`` always.
+    ``callback_hits``
+        fused-callback invocations (predicate-satisfying leaves). Zero for
+        the generic :func:`repro.core.query.traverse` driver, which has no
+        hit notion of its own — the engine protocols fill it in.
+    ``early_exits``
+        whether this query terminated through the callback's ``done`` flag
+        (§4.1.2 ``CallbackTreeTraversalControl``) rather than exhausting
+        the tree.
+    ``max_depth``
+        deepest tree level reached (rope backend: node depth of the
+        deepest visited node; stack backend: high-water stack pointer).
+    """
+
+    nodes_visited: jax.Array  # (q,) int32
+    aabb_tests: jax.Array     # (q,) int32
+    leaf_tests: jax.Array     # (q,) int32
+    callback_hits: jax.Array  # (q,) int32
+    early_exits: jax.Array    # (q,) bool
+    max_depth: jax.Array      # (q,) int32
+
+    def totals(self) -> dict[str, jax.Array]:
+        """Batch-level scalars (still on device): sums of the counters,
+        count of early exits, max of the depth high-water marks."""
+        return {
+            "nodes_visited": jnp.sum(self.nodes_visited),
+            "aabb_tests": jnp.sum(self.aabb_tests),
+            "leaf_tests": jnp.sum(self.leaf_tests),
+            "callback_hits": jnp.sum(self.callback_hits),
+            "early_exits": jnp.sum(self.early_exits.astype(jnp.int32)),
+            "max_depth": jnp.max(self.max_depth, initial=0),
+        }
+
+    def psum(self, axis: str) -> "TraversalStats":
+        """Cross-shard reduction (call inside a ``shard_map`` region):
+        counters sum, the depth high-water mark maxes, ``early_exits``
+        stays the per-query local column (it is per-query, not global)."""
+        return TraversalStats(
+            nodes_visited=jax.lax.psum(self.nodes_visited, axis),
+            aabb_tests=jax.lax.psum(self.aabb_tests, axis),
+            leaf_tests=jax.lax.psum(self.leaf_tests, axis),
+            callback_hits=jax.lax.psum(self.callback_hits, axis),
+            early_exits=self.early_exits,
+            max_depth=jax.lax.pmax(self.max_depth, axis),
+        )

@@ -1,0 +1,170 @@
+"""Host-side span tracer with Chrome-trace-event export.
+
+JAX dispatch is asynchronous: wall-clock timestamps around a call measure
+dispatch, not compute. Each :class:`Span` therefore carries an optional
+FENCE — a pytree of device values that ``jax.block_until_ready`` drains
+before the span closes — so a span's duration covers the device work it
+launched. Spans nest through a plain stack; the export is Chrome trace
+event JSON (``{"traceEvents": [...]}``, "X" complete events), loadable
+directly in Perfetto (ui.perfetto.dev) or ``chrome://tracing``.
+
+Usage::
+
+    tracer = SpanTracer()
+    with tracer.span("dbscan", n=4096) as sp:
+        res = fdbscan(pts, eps, 2)
+        sp.fence(res)          # block_until_ready before the span closes
+    tracer.export("trace.json")
+
+``traced(tracer, name, fn, *args)`` is the one-liner used by the pipeline
+wiring (``halos/merge``, ``core/distributed``, ``analysis/insitu``): when
+``tracer`` is None it calls ``fn`` directly — zero overhead, no fencing —
+so observability stays strictly opt-in.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["Span", "SpanTracer", "traced", "load_chrome_trace", "span_tree"]
+
+
+class Span:
+    """One open span; created by :meth:`SpanTracer.span`."""
+
+    def __init__(self, tracer: "SpanTracer", name: str, depth: int,
+                 args: dict[str, Any]):
+        self.tracer = tracer
+        self.name = name
+        self.depth = depth
+        self.args = args
+        self.t0 = 0.0
+        self._fences: list[Any] = []
+
+    def fence(self, value):
+        """Register device values the span must drain before closing.
+        Returns ``value`` so the call can wrap an expression in place."""
+        self._fences.append(value)
+        return value
+
+    def __enter__(self) -> "Span":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            for v in self._fences:
+                jax.block_until_ready(v)
+        self.tracer._close(self, time.perf_counter())
+
+
+class SpanTracer:
+    """Nested spans -> Chrome trace events. Single-threaded by design (one
+    ``tid``); nesting is encoded by timestamp containment, which is how
+    Perfetto stacks "X" events on a track."""
+
+    def __init__(self, process_name: str = "repro"):
+        self.process_name = process_name
+        self._epoch = time.perf_counter()
+        self._stack: list[Span] = []
+        self.events: list[dict] = []
+
+    # --- recording ----------------------------------------------------------
+
+    def span(self, name: str, **args) -> Span:
+        sp = Span(self, name, depth=len(self._stack), args=args)
+        self._stack.append(sp)
+        return sp
+
+    def _close(self, sp: Span, t1: float) -> None:
+        # close any dangling children first (exception unwind safety)
+        while self._stack and self._stack[-1] is not sp:
+            self._stack.pop()
+        if self._stack:
+            self._stack.pop()
+        self.events.append({
+            "name": sp.name,
+            "ph": "X",
+            "ts": (sp.t0 - self._epoch) * 1e6,   # Chrome traces are in us
+            "dur": (t1 - sp.t0) * 1e6,
+            "pid": os.getpid(),
+            "tid": 0,
+            "cat": "repro",
+            "args": {**sp.args, "depth": sp.depth},
+        })
+
+    def instant(self, name: str, **args) -> None:
+        """A zero-duration marker event."""
+        self.events.append({
+            "name": name, "ph": "i", "s": "t",
+            "ts": (time.perf_counter() - self._epoch) * 1e6,
+            "pid": os.getpid(), "tid": 0, "cat": "repro", "args": args,
+        })
+
+    def counter(self, name: str, **series) -> None:
+        """A counter track sample (Perfetto renders these as line plots)."""
+        self.events.append({
+            "name": name, "ph": "C",
+            "ts": (time.perf_counter() - self._epoch) * 1e6,
+            "pid": os.getpid(), "tid": 0, "cat": "repro",
+            "args": {k: float(v) for k, v in series.items()},
+        })
+
+    # --- export -------------------------------------------------------------
+
+    def to_chrome(self) -> dict:
+        meta = {
+            "name": "process_name", "ph": "M", "pid": os.getpid(), "tid": 0,
+            "args": {"name": self.process_name},
+        }
+        return {"traceEvents": [meta] + self.events,
+                "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> str:
+        """Write the Chrome-trace JSON; returns ``path``."""
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f, indent=1)
+        return path
+
+
+def traced(tracer: SpanTracer | None, name: str, fn: Callable, *args,
+           span_args: dict | None = None, **kwargs):
+    """Run ``fn(*args, **kwargs)`` inside a fenced span — or, with
+    ``tracer=None``, call it directly (the zero-overhead default)."""
+    if tracer is None:
+        return fn(*args, **kwargs)
+    with tracer.span(name, **(span_args or {})) as sp:
+        return sp.fence(fn(*args, **kwargs))
+
+
+# --- round-trip helpers (tests, tooling) ------------------------------------
+
+def load_chrome_trace(path: str) -> list[dict]:
+    """Load a Chrome-trace JSON and return its complete ("X") span events,
+    sorted by start time."""
+    tree = json.loads(open(path).read())
+    evs = [e for e in tree["traceEvents"] if e.get("ph") == "X"]
+    return sorted(evs, key=lambda e: e["ts"])
+
+
+def span_tree(events: list[dict]) -> dict[str, list[str]]:
+    """Parent -> children mapping recovered purely from timestamp
+    containment (the same rule Perfetto uses to stack the track)."""
+    out: dict[str, list[str]] = {e["name"]: [] for e in events}
+    for i, child in enumerate(events):
+        best = None
+        for parent in events:
+            if parent is child:
+                continue
+            if (parent["ts"] <= child["ts"]
+                    and parent["ts"] + parent["dur"]
+                    >= child["ts"] + child["dur"]):
+                if best is None or parent["dur"] < best["dur"]:
+                    best = parent
+        if best is not None:
+            out[best["name"]].append(child["name"])
+    return out

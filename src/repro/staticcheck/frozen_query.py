@@ -1,0 +1,145 @@
+"""Frozen pre-obs twin of the engine's spatial query path.
+
+This module is a VERBATIM snapshot of what ``core/query.py`` staged for a
+``query_count(bvh, within(...))`` call BEFORE the observability layer
+added ``with_stats=`` (the ``_one_stackless`` / ``_one_stack`` cores, the
+``Within`` predicate functions, the fused leaf callback wrapper, the
+count protocol's callback). The ``stats_path_identity`` audit traces both
+this twin and the live engine with ``with_stats=False`` and asserts their
+jaxprs are op-for-op identical — the machine check that observability is
+zero-cost when disabled (no counter arithmetic leaks into the hot path).
+
+Do NOT refactor this file to track engine changes mechanically: it only
+moves when the engine's *stats-off* program intentionally changes, and
+such a change must be a conscious decision (update both, re-run
+``python -m repro.staticcheck --jaxpr``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bvh import Bvh, SENTINEL
+from repro.core.geometry import point_aabb_dist2
+from repro.core.query import _STACK_DEPTH, Within
+
+__all__ = ["frozen_count_stackless", "frozen_count_stack"]
+
+
+def _frozen_one_stackless(bvh: Bvh, q, node_fn, leaf_fn, carry0, start):
+    n = bvh.num_leaves
+
+    def cond(state):
+        node, _, done = state
+        return (node != SENTINEL) & ~done
+
+    def body(state):
+        node, carry, done = state
+        is_leaf = node >= n - 1
+        sorted_idx = node - (n - 1)
+        carry_leaf, done_leaf = leaf_fn(
+            q, carry, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)], sorted_idx)
+        next_leaf = bvh.rope[node]
+
+        hit = node_fn(q, carry, node)
+        node_c = jnp.clip(node, 0, n - 2)
+        next_internal = jnp.where(hit, bvh.left_child[node_c], bvh.rope[node])
+
+        carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
+        done = jnp.where(is_leaf, done | done_leaf, done)
+        node = jnp.where(is_leaf, next_leaf, next_internal)
+        return node, carry, done
+
+    _, carry, _ = jax.lax.while_loop(  # staticcheck: bvh-loop-ok (frozen twin)
+        cond, body, (start, carry0, jnp.bool_(False)))
+    return carry
+
+
+def _frozen_one_stack(bvh: Bvh, q, node_fn, leaf_fn, carry0):
+    n = bvh.num_leaves
+    stack0 = jnp.full((_STACK_DEPTH,), SENTINEL, jnp.int32).at[0].set(0)
+
+    def cond(state):
+        sp, _, _, done = state
+        return (sp > 0) & ~done
+
+    def body(state):
+        sp, stack, carry, done = state
+        node = stack[sp - 1]
+        sp = sp - 1
+        is_leaf = node >= n - 1
+        sorted_idx = node - (n - 1)
+
+        carry_leaf, done_leaf = leaf_fn(
+            q, carry, bvh.leaf_perm[jnp.clip(sorted_idx, 0, n - 1)], sorted_idx)
+
+        hit = node_fn(q, carry, node) & ~is_leaf
+        node_c = jnp.clip(node, 0, n - 2)
+        stack = stack.at[sp].set(jnp.where(hit, bvh.right_child[node_c], stack[sp]))
+        sp_r = sp + hit.astype(jnp.int32)
+        stack = stack.at[sp_r].set(jnp.where(hit, bvh.left_child[node_c], stack[sp_r]))
+        sp = sp_r + hit.astype(jnp.int32)
+
+        carry = jax.tree.map(lambda a, b: jnp.where(is_leaf, a, b), carry_leaf, carry)
+        done = done | (is_leaf & done_leaf)
+        return sp, stack, carry, done
+
+    _, _, carry, _ = jax.lax.while_loop(  # staticcheck: bvh-loop-ok (frozen twin)
+        cond, body, (jnp.int32(1), stack0, carry0, jnp.bool_(False)))
+    return carry
+
+
+def _frozen_within_fns(bvh: Bvh, pred: Within):
+    n = bvh.num_leaves
+    geom = (pred.centers, pred.radii.astype(pred.centers.dtype) ** 2)
+
+    def node_fn(q, carry, node):
+        (_, center, r2) = q
+        return point_aabb_dist2(center, bvh.node_lo[node], bvh.node_hi[node]) <= r2
+
+    def leaf_aux(q, sorted_idx):
+        (_, center, r2) = q
+        leaf_node = jnp.clip(sorted_idx, 0, n - 1) + (n - 1)
+        d2 = point_aabb_dist2(center, bvh.node_lo[leaf_node], bvh.node_hi[leaf_node])
+        return d2, d2 <= r2
+
+    return geom, node_fn, leaf_aux
+
+
+def _frozen_count(bvh: Bvh, pred: Within, backend: str):
+    geom, node_fn, leaf_aux = _frozen_within_fns(bvh, pred)
+    q_count = jax.tree.leaves(geom)[0].shape[0]
+    qidx = jnp.arange(q_count, dtype=jnp.int32)
+    qdata = (qidx,) + geom
+
+    def cb(count, qidx, obj, d2):
+        count = count + 1
+        done = jnp.bool_(False)
+        return count, done
+
+    def leaf_fn(q, carry, obj, sorted_idx):
+        d2, hit = leaf_aux(q, sorted_idx)
+        carry2, done2 = cb(carry, q[0], obj, d2)
+        carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
+        return carry, hit & done2
+
+    carries = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (q_count,) + jnp.shape(x)), jnp.int32(0))
+    if backend == "stackless":
+        start_nodes = jnp.zeros((q_count,), jnp.int32)
+        return jax.vmap(
+            lambda q, s, c: _frozen_one_stackless(bvh, q, node_fn, leaf_fn, c, s)
+        )(qdata, start_nodes, carries)
+    return jax.vmap(
+        lambda q, c: _frozen_one_stack(bvh, q, node_fn, leaf_fn, c)
+    )(qdata, carries)
+
+
+def frozen_count_stackless(bvh: Bvh, pred: Within):
+    """What ``query_count(bvh, pred)`` staged pre-obs (rope backend)."""
+    return _frozen_count(bvh, pred, "stackless")
+
+
+def frozen_count_stack(bvh: Bvh, pred: Within):
+    """What ``query_count(bvh, pred, backend='stack')`` staged pre-obs."""
+    return _frozen_count(bvh, pred, "stack")

@@ -40,6 +40,7 @@ __all__ = [
     "no_dense_intermediate",
     "no_host_transfer",
     "audit_jaxpr",
+    "jaxpr_op_signature",
     "count_compile_signatures",
     "bounded_recompiles",
     "assert_no_host_transfers",
@@ -153,6 +154,21 @@ def audit_jaxpr(fn, args, rules: Iterable[Callable], *,
     for rule in rules:
         findings.extend(rule(closed, name))
     return findings
+
+
+def jaxpr_op_signature(fn, args=()) -> tuple:
+    """Stable op-level signature of a traced program: the sequence of
+    ``(primitive name, output avals)`` over the jaxpr and every sub-jaxpr
+    (while/scan bodies included), in trace order. Two callables with equal
+    signatures stage the same ops on the same shapes/dtypes — the equality
+    the ``stats_path_identity`` audit uses to prove the engine's
+    ``with_stats=False`` path is op-for-op the pre-obs program. Accepts a
+    callable + example args or an already-closed jaxpr."""
+    closed = _closed(fn, args)
+    jaxpr = getattr(closed, "jaxpr", closed)
+    return tuple(
+        (eqn.primitive.name, tuple(str(v.aval) for v in eqn.outvars))
+        for eqn in iter_eqns(jaxpr))
 
 
 # --- recompile budget (trace a workload sweep) ------------------------------

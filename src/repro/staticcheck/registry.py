@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.staticcheck.findings import Finding
 from repro.staticcheck.jaxpr_audit import (audit_jaxpr, bounded_recompiles,
+                                           jaxpr_op_signature,
                                            no_dense_intermediate,
                                            no_host_transfer)
 
@@ -166,6 +167,64 @@ def _audit_serving_buckets(fast: bool) -> list[Finding]:
         name="serving_bucketed_query")
 
 
+def _audit_stats_path_identity(fast: bool) -> list[Finding]:
+    """The obs layer's zero-cost contract: with ``with_stats=False`` the
+    engine must stage the exact pre-obs program. Compares the live
+    ``query_count`` path against the frozen twin snapshot in
+    ``staticcheck/frozen_query.py`` by op-level jaxpr signature, for both
+    instrumented traversal cores (rope + stack)."""
+    from repro.core.query import query_count
+    from repro.staticcheck.frozen_query import (frozen_count_stack,
+                                                frozen_count_stackless)
+
+    n, nq = (128, 32) if fast else (256, 64)
+    bvh, pred = _skewed_workload(n, nq)
+    findings: list[Finding] = []
+    for backend, frozen in (("stackless", frozen_count_stackless),
+                            ("stack", frozen_count_stack)):
+        live = jaxpr_op_signature(
+            lambda b, p: query_count(b, p, backend=backend), (bvh, pred))
+        ref = jaxpr_op_signature(frozen, (bvh, pred))
+        if live == ref:
+            continue
+        divergence = next(
+            (i for i, (a, b) in enumerate(zip(live, ref)) if a != b),
+            min(len(live), len(ref)))
+        findings.append(Finding(
+            rule="stats-path-identity",
+            path=f"<jaxpr:query_count[{backend}]>", line=0,
+            message=(
+                f"with_stats=False path diverged from the frozen pre-obs "
+                f"jaxpr at op {divergence} "
+                f"(live {len(live)} ops vs frozen {len(ref)}; "
+                f"live[{divergence}]="
+                f"{live[divergence] if divergence < len(live) else '<end>'}, "
+                f"frozen[{divergence}]="
+                f"{ref[divergence] if divergence < len(ref) else '<end>'}): "
+                f"counter arithmetic is leaking into the stats-off hot "
+                f"path, or the engine changed without updating "
+                f"staticcheck/frozen_query.py")))
+    return findings
+
+
+def _audit_obs_stats(fast: bool) -> list[Finding]:
+    """The stats-ON entry points under the existing device-discipline
+    rules: instrumented traversal must still stage no host transfer and no
+    dense buffer (the counters ride the loop carry)."""
+    from repro.core.query import query_count
+
+    n, nq = (128, 32) if fast else (256, 64)
+    bvh, pred = _skewed_workload(n, nq)
+    findings: list[Finding] = []
+    for backend in ("stackless", "stack"):
+        findings.extend(audit_jaxpr(
+            lambda b, p: query_count(b, p, backend=backend, with_stats=True),
+            (bvh, pred),
+            [no_dense_intermediate(nq * n), no_host_transfer()],
+            name=f"query_count_stats_{backend}"))
+    return findings
+
+
 REGISTERED_AUDITS: list[Audit] = [
     Audit("query_csr_device", _audit_query_csr_device),
     Audit("fdbscan", _audit_fdbscan),
@@ -173,6 +232,8 @@ REGISTERED_AUDITS: list[Audit] = [
     Audit("halo_pipeline_sharded", _audit_halo_pipeline_sharded),
     Audit("kernels/eps_neighbor_counts", _audit_kernel_pairwise),
     Audit("serving/bucketed_recompiles", _audit_serving_buckets),
+    Audit("obs/stats_path_identity", _audit_stats_path_identity),
+    Audit("obs/query_stats_device", _audit_obs_stats),
 ]
 
 
