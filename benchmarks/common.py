@@ -45,5 +45,22 @@ def write_artifact(out_path: str, results: dict) -> None:
     ``compare`` tolerance-bands the ``seconds`` value and ignores the rest,
     while a record WITHOUT ``seconds`` becomes an exact-match contract —
     too brittle for anything derived from timings or platform specifics.
+
+    Every artifact also carries a ``staticcheck_absint`` metadata record:
+    the scale-safety coverage summary (rules, entry points, values
+    analyzed, findings) for the tree the numbers were measured on, so a
+    benchmark result can be traced to a scale-audited build. Its
+    ``seconds`` is pinned at 0.0 — records at 0.0 never trip the timing
+    gate — and the memoized pass costs ~1s once per process.
     """
+    results = dict(results)
+    results.setdefault("staticcheck_absint", _absint_block())
     pathlib.Path(out_path).write_text(json.dumps(results, indent=2))
+
+
+def _absint_block() -> dict:
+    try:
+        from repro.staticcheck.absint_registry import absint_coverage
+        return absint_coverage()
+    except Exception as exc:  # never fail a benchmark run over metadata
+        return {"seconds": 0.0, "error": f"{type(exc).__name__}: {exc}"}

@@ -135,6 +135,30 @@ bad = ("import jax.numpy as jnp\n"
        "    return d - jnp.round(d / L) * L\n")
 print("staticcheck demo:", lint_source(bad, "snippet.py")[0])
 
+# --- scale-safety checks ----------------------------------------------------
+# Everything above ran at n=512, but the paper's target is N=1e9 points on
+# 64 shards. The third staticcheck layer — an abstract interpreter over the
+# traced jaxpr — re-reads the staged toy sizes as SYMBOLIC exascale sizes
+# and propagates a value interval per array, proving the W rules without
+# materializing anything: W1 index-width (a signed int escapes its dtype),
+# W2 precision (float quantization past 2^mantissa — the min-image trap of
+# ROADMAP item 3), W3 bounds & routes (unprovable gather indices, broken
+# ppermute tables). Here it derives that the int32 CSR offsets of the very
+# call audited above overflow at 64e9 total hits:
+from repro.staticcheck import SymbolicScale, analyze, scale_for
+from repro.staticcheck.lattice import Ival
+
+scale = SymbolicScale(dims=scale_for(n, 10**9, {64 * n: 64 * 10**9}))
+rep = analyze(
+    lambda b, c: query_csr_device(b, within(jp, eps), capacity=64 * n,
+                                  counts=c),
+    (bvh, counts), name="quickstart_csr_int32", scale=scale,
+    input_ivals=[None, Ival(0, 2048)])
+print("scale-safety demo:", rep.findings[0].message)
+# The fix is the satellite API: query_csr_device(..., index_dtype=jnp.int64)
+# under x64 analyzes clean — CI pins the widened production configs (and
+# the seeded broken twins) via `python -m repro.staticcheck --absint`.
+
 # --- TPU-native tier: ε-cell binning + MXU stencil kernels -----------------
 # (interpret-mode on CPU: this section takes several minutes here.)
 dims = grid_dims_for(np.zeros(3), np.ones(3), eps)

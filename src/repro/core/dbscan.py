@@ -104,8 +104,9 @@ def min_core_label_on(bvh: Bvh, query_pts: jax.Array, eps, obj_labels,
 
     ``obj_labels`` / ``obj_core`` are indexed by the TREE's object index —
     decoupled from the query set, so the distributed layer can run local
-    queries against a local ∪ ghost tree with exchanged ghost labels."""
-    sentinel = jnp.int32(sentinel)
+    queries against a local ∪ ghost tree with exchanged ghost labels.
+    The sentinel follows ``obj_labels``'s dtype (int64 global ids at scale)."""
+    sentinel = jnp.asarray(sentinel, getattr(obj_labels, "dtype", jnp.int32))
 
     def fn(best, _qi, j, _d2):
         return (jnp.where(obj_core[j], jnp.minimum(best, obj_labels[j]), best),

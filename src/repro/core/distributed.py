@@ -45,7 +45,8 @@ from jax.experimental.shard_map import shard_map
 from repro.core.bvh import Bvh, build_bvh
 from repro.core.dbscan import count_neighbors, min_core_label_on, union_rounds
 from repro.core.geometry import scene_bounds
-from repro.core.query import DeviceCsr, query_csr_device, within
+from repro.core.query import (DeviceCsr, _canon_index_dtype,
+                              query_csr_device, within)
 
 __all__ = [
     "NOISE",
@@ -79,7 +80,7 @@ class HaloExchange(NamedTuple):
     per-point payloads can be re-shipped later (``exchange_payload``)."""
     halo_pts: jax.Array    # (2H, d) ghost points; invalid rows folded ≥4ε out
     halo_valid: jax.Array  # (2H,) bool
-    halo_gid: jax.Array    # (2H,) int32 global ids, -1 where invalid
+    halo_gid: jax.Array    # (2H,) global ids (dtype follows gid), -1 invalid
     overflow: jax.Array    # () bool — any shard overflowed its halo buffer
     lidx: jax.Array        # (H,) local rows packed for the LEFT neighbor
     lvalid: jax.Array      # (H,) bool
@@ -89,21 +90,24 @@ class HaloExchange(NamedTuple):
 
 
 class ShardContext(NamedTuple):
-    """Per-shard sharded-query substrate (build once, query many)."""
-    gid: jax.Array       # (n_loc,) int32 global ids of local points
+    """Per-shard sharded-query substrate (build once, query many). Global
+    ids carry the caller's ``index_dtype`` — int64 (under x64) once
+    ``n_shards * n_loc`` can exceed 2^31 (staticcheck rule W1)."""
+    gid: jax.Array       # (n_loc,) index_dtype global ids of local points
     exchange: HaloExchange
     all_pts: jax.Array   # (n_loc + 2H, d) local ∪ ghost
-    all_gid: jax.Array   # (n_loc + 2H,) int32, -1 on invalid ghost rows
+    all_gid: jax.Array   # (n_loc + 2H,) index_dtype, -1 on invalid ghost rows
     bvh_all: Bvh         # tree over local ∪ ghost (cross-shard queries)
     bvh_local: Bvh       # tree over local points only
-    sentinel: jax.Array  # () int32 = n_shards * n_loc (> any global id)
+    sentinel: jax.Array  # () index_dtype = n_shards * n_loc (> any global id)
 
 
 class ShardedCsr(NamedTuple):
-    """Cross-shard CSR: per-shard rows over LOCAL queries, global object ids."""
-    offsets: jax.Array     # (S, n_loc+1) int32 per-shard row starts
-    indices: jax.Array     # (S, capacity) int32 GLOBAL point ids, -1 padded
-    total: jax.Array       # (S,) int32 hits per shard
+    """Cross-shard CSR: per-shard rows over LOCAL queries, global object ids
+    (offsets/indices/total carry the caller's ``index_dtype``)."""
+    offsets: jax.Array     # (S, n_loc+1) per-shard row starts
+    indices: jax.Array     # (S, capacity) GLOBAL point ids, -1 padded
+    total: jax.Array       # (S,) hits per shard
     overflowed: jax.Array  # () bool — any shard exceeded ``capacity``
 
 
@@ -164,7 +168,7 @@ def halo_exchange(pts: jax.Array, gid: jax.Array, eps, halo_cap: int,
     halo_l_enc, halo_r_enc = _xchg(axis, n_shards, rgid_enc, lgid_enc)
     halo_enc = jnp.concatenate([halo_l_enc, halo_r_enc])
     halo_valid = halo_enc > 0
-    halo_gid = jnp.where(halo_valid, halo_enc - 1, -1).astype(jnp.int32)
+    halo_gid = jnp.where(halo_valid, halo_enc - 1, -1).astype(gid.dtype)
 
     raw = jnp.concatenate([halo_l_pts, halo_r_pts])
     ghost_hi = jnp.max(jnp.where(halo_valid[:, None], raw,
@@ -198,15 +202,18 @@ def exchange_payload(ex: HaloExchange, values: jax.Array, fill,
 
 
 def shard_context(pts: jax.Array, eps, halo_cap: int, axis: str,
-                  n_shards: int, *, use_64bit: bool = True) -> ShardContext:
+                  n_shards: int, *, use_64bit: bool = True,
+                  index_dtype=jnp.int32) -> ShardContext:
     """Build the per-shard sharded-query substrate (call inside a shard_map
     region): ε-ghost exchange, then BVHs over local ∪ ghost and local-only
     points. Everything downstream — cross-shard CSR queries, distributed
     DBSCAN, catalog merge — runs off this context with no further host
-    involvement."""
+    involvement. ``index_dtype`` sets the global-id dtype — int64 (under
+    x64) once ``n_shards * n_loc`` can exceed 2^31."""
+    idx_dt = _canon_index_dtype(index_dtype)
     n_loc = pts.shape[0]
-    me = jax.lax.axis_index(axis)
-    gid = (me * n_loc + jnp.arange(n_loc, dtype=jnp.int32)).astype(jnp.int32)
+    me = jax.lax.axis_index(axis).astype(idx_dt)
+    gid = me * n_loc + jnp.arange(n_loc, dtype=idx_dt)
     ex = halo_exchange(pts, gid, eps, halo_cap, axis, n_shards)
 
     all_pts = jnp.concatenate([pts, ex.halo_pts])
@@ -217,7 +224,7 @@ def shard_context(pts: jax.Array, eps, halo_cap: int, axis: str,
     bvh_local = build_bvh(pts, lo_l, hi_l, use_64bit=use_64bit)
     return ShardContext(gid=gid, exchange=ex, all_pts=all_pts,
                         all_gid=all_gid, bvh_all=bvh_all, bvh_local=bvh_local,
-                        sentinel=jnp.int32(n_shards * n_loc))
+                        sentinel=jnp.asarray(n_shards * n_loc, idx_dt))
 
 
 def sharded_query_csr(ctx: ShardContext, predicates, capacity: int, *,
@@ -225,12 +232,14 @@ def sharded_query_csr(ctx: ShardContext, predicates, capacity: int, *,
                       backend: str = "stackless") -> DeviceCsr:
     """Cross-shard device CSR (call inside a shard_map region): run the
     predicates against this shard's local ∪ ghost tree and remap hit indices
-    to GLOBAL point ids. No host sync — the result stays on device."""
+    to GLOBAL point ids (dtype follows ``ctx.gid``). No host sync — the
+    result stays on device."""
+    idx_dt = ctx.gid.dtype
     res = query_csr_device(ctx.bvh_all, predicates, capacity,
-                           chunk=chunk, backend=backend)
+                           chunk=chunk, backend=backend, index_dtype=idx_dt)
     n_all = ctx.all_gid.shape[0]
     safe = jnp.clip(res.indices, 0, n_all - 1)
-    gidx = jnp.where(res.indices >= 0, ctx.all_gid[safe], -1).astype(jnp.int32)
+    gidx = jnp.where(res.indices >= 0, ctx.all_gid[safe], -1).astype(idx_dt)
     return DeviceCsr(offsets=res.offsets, indices=gidx, total=res.total,
                      overflowed=res.overflowed)
 
@@ -282,16 +291,17 @@ def _mesh_ref(mesh: Mesh):
 
 @functools.partial(_maybe_jit,
                    static_argnames=("capacity", "halo_cap", "axis", "mesh_ref",
-                                    "chunk", "backend", "use_64bit"))
+                                    "chunk", "backend", "use_64bit",
+                                    "index_dtype"))
 def _neighbor_csr_sharded(points, eps, capacity, halo_cap, axis, mesh_ref,
-                          chunk, backend, use_64bit):
+                          chunk, backend, use_64bit, index_dtype):
     mesh = mesh_ref.mesh
     n_shards = mesh.shape[axis]
 
     def local_fn(pts):
         pts = pts[0]
         ctx = shard_context(pts, eps, halo_cap, axis, n_shards,
-                            use_64bit=use_64bit)
+                            use_64bit=use_64bit, index_dtype=index_dtype)
         pred = within(pts, jnp.asarray(eps, pts.dtype))
         res = sharded_query_csr(ctx, pred, capacity, axis=axis,
                                 chunk=chunk, backend=backend)
@@ -312,7 +322,8 @@ def _neighbor_csr_sharded(points, eps, capacity, halo_cap, axis, mesh_ref,
 def sharded_neighbor_csr(points: jax.Array, eps, *, capacity: int, mesh: Mesh,
                          axis: str = "data", halo_cap: int = 512,
                          chunk: int = 32, backend: str = "stackless",
-                         use_64bit: bool = True, tracer=None) -> ShardedCsr:
+                         use_64bit: bool = True, index_dtype=jnp.int32,
+                         tracer=None) -> ShardedCsr:
     """The reusable sharded-query layer, end to end: slab-sharded points in,
     per-shard ε-neighbor CSR out (GLOBAL point ids, self included), computed
     as per-shard BVH build → ppermute ghost exchange → device-resident CSR —
@@ -320,22 +331,25 @@ def sharded_neighbor_csr(points: jax.Array, eps, *, capacity: int, mesh: Mesh,
 
     ``points``: (n_total, d) pre-sorted by x (``slab_partition``), n_total
     divisible by the axis size. ``capacity`` bounds hits PER SHARD.
+    ``index_dtype``: global-id/offset dtype — int64 (under x64) once
+    ``n_total`` or per-shard hits can exceed 2^31.
 
     ``tracer`` (a ``repro.obs.SpanTracer``) wraps the fused launch in one
     fenced span — the exchange/build/query phases share a single shard_map
     region by design, so the host sees them as one launch — and samples the
     per-shard hit totals onto a counter track after the fence."""
+    idx_dt = _canon_index_dtype(index_dtype)
     if tracer is None:
         offsets, indices, total, ovf = _neighbor_csr_sharded(
             points, eps, int(capacity), halo_cap, axis, _mesh_ref(mesh),
-            chunk, backend, use_64bit)
+            chunk, backend, use_64bit, idx_dt)
         return ShardedCsr(offsets=offsets, indices=indices, total=total,
                           overflowed=ovf)
     with tracer.span("sharded_neighbor_csr", n=int(points.shape[0]),
                      shards=int(mesh.shape[axis]), backend=backend) as sp:
         offsets, indices, total, ovf = sp.fence(_neighbor_csr_sharded(
             points, eps, int(capacity), halo_cap, axis, _mesh_ref(mesh),
-            chunk, backend, use_64bit))
+            chunk, backend, use_64bit, idx_dt))
     tracer.counter("csr_hits", total=int(jnp.sum(total)),
                    overflowed=int(ovf))
     return ShardedCsr(offsets=offsets, indices=indices, total=total,
@@ -371,7 +385,8 @@ def dbscan_local_shard(pts: jax.Array, eps, min_pts: int, ctx: ShardContext,
     # --- local components: union fixpoint on the local tree -----------------
     local_root, _ = union_rounds(ctx.bvh_local, pts, eps_f, core, n_loc,
                                  max_rounds=max_rounds)
-    labels0 = jnp.where(core, ctx.gid[local_root], sentinel).astype(jnp.int32)
+    idx_dt = ctx.gid.dtype
+    labels0 = jnp.where(core, ctx.gid[local_root], sentinel).astype(idx_dt)
 
     def halo_labels(labels):
         return exchange_payload(ex, labels, sentinel, axis)
@@ -387,9 +402,9 @@ def dbscan_local_shard(pts: jax.Array, eps, min_pts: int, ctx: ShardContext,
                               core, sentinel)
         m = jnp.where(core, jnp.minimum(labels, m), sentinel)
         # scatter the min onto the LOCAL root, then broadcast back
-        root_min = jnp.full((n_loc,), sentinel, jnp.int32) \
+        root_min = jnp.full((n_loc,), sentinel, idx_dt) \
             .at[local_root].min(m)
-        new = jnp.where(core, root_min[local_root], labels).astype(jnp.int32)
+        new = jnp.where(core, root_min[local_root], labels).astype(idx_dt)
         changed_local = jnp.any(new != labels)
         changed = jax.lax.psum(changed_local.astype(jnp.int32), axis) > 0
         return new, changed, r + 1
@@ -406,19 +421,21 @@ def dbscan_local_shard(pts: jax.Array, eps, min_pts: int, ctx: ShardContext,
     final = jnp.where(core, labels,
                       jnp.where(border < sentinel, border, NOISE))
     final = jnp.where(final == sentinel, NOISE, final)
-    return final.astype(jnp.int32), core, rounds
+    return final.astype(idx_dt), core, rounds
 
 
 @functools.partial(_maybe_jit,
                    static_argnames=("min_pts", "halo_cap", "axis", "mesh_ref",
-                                    "max_rounds"))
-def _dbscan_sharded(points, eps, min_pts, halo_cap, axis, mesh_ref, max_rounds):
+                                    "max_rounds", "index_dtype"))
+def _dbscan_sharded(points, eps, min_pts, halo_cap, axis, mesh_ref, max_rounds,
+                    index_dtype):
     mesh = mesh_ref.mesh
     n_shards = mesh.shape[axis]
 
     def local_fn(pts):
         pts = pts[0]                                  # drop leading shard dim
-        ctx = shard_context(pts, eps, halo_cap, axis, n_shards)
+        ctx = shard_context(pts, eps, halo_cap, axis, n_shards,
+                            index_dtype=index_dtype)
         labels, core, rounds = dbscan_local_shard(
             pts, eps, min_pts, ctx, axis=axis, max_rounds=max_rounds)
         return (labels[None], core[None], rounds[None],
@@ -438,22 +455,28 @@ def _dbscan_sharded(points, eps, min_pts, halo_cap, axis, mesh_ref, max_rounds):
 
 def dbscan_distributed(points: jax.Array, eps, min_pts: int, *, mesh: Mesh,
                        axis: str = "data", halo_cap: int = 512,
-                       max_rounds: int = 64, tracer=None) -> DistDbscanResult:
+                       max_rounds: int = 64, index_dtype=jnp.int32,
+                       tracer=None) -> DistDbscanResult:
     """points: (n_total, d), n_total divisible by the axis size, pre-sorted
-    by x (``slab_partition``) so shard slabs are contiguous.
+    by x (``slab_partition``) so shard slabs are contiguous. ``index_dtype``
+    sets the global-label dtype — int64 (under x64) once ``n_total`` can
+    exceed 2^31.
 
     ``tracer`` (a ``repro.obs.SpanTracer``) wraps the fused
     exchange + core-test + union-fixpoint launch in one fenced span and
     records the merge round count / halo overflow after the fence."""
+    idx_dt = _canon_index_dtype(index_dtype)
     if tracer is None:
         labels, core, rounds, ovf = _dbscan_sharded(
-            points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds)
+            points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds,
+            idx_dt)
         return DistDbscanResult(labels=labels, core_mask=core, rounds=rounds,
                                 halo_overflow=ovf)
     with tracer.span("dbscan_distributed", n=int(points.shape[0]),
                      shards=int(mesh.shape[axis]), min_pts=int(min_pts)) as sp:
         labels, core, rounds, ovf = sp.fence(_dbscan_sharded(
-            points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds))
+            points, eps, min_pts, halo_cap, axis, _mesh_ref(mesh), max_rounds,
+            idx_dt))
     tracer.counter("dbscan_rounds", rounds=int(rounds),
                    halo_overflow=int(ovf))
     return DistDbscanResult(labels=labels, core_mask=core, rounds=rounds,

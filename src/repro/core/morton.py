@@ -57,10 +57,23 @@ def _interleave10(x: jax.Array, y: jax.Array, z: jax.Array) -> jax.Array:
     return (_expand_bits_10(x) << 2) | (_expand_bits_10(y) << 1) | _expand_bits_10(z)
 
 
+def _quantize(unit_points: jax.Array, bins: int) -> jax.Array:
+    """[0,1)^d floats -> uint32 bin ids in [0, bins). The clamp happens in
+    FLOAT space, before the integer cast: out-of-range inputs (unnormalized
+    points, the BIG=1e15 ghost fill) would otherwise overflow the cast —
+    float->int of a value past the dtype range is undefined (staticcheck
+    rule W1) — whereas the clamped value always fits. uint32 pair idiom
+    throughout: no signed intermediary, no x64 dependence."""
+    assert jnp.issubdtype(unit_points.dtype, jnp.floating), unit_points.dtype
+    q = jnp.clip(jnp.floor(unit_points * float(bins)), 0.0, float(bins - 1))
+    q = q.astype(U32)
+    assert q.dtype == U32, q.dtype
+    return q
+
+
 def morton32(unit_points: jax.Array) -> jax.Array:
     """32-bit (30 used) Morton codes for points in [0,1)^3. Shape (n,3)->(n,)."""
-    q = jnp.floor(unit_points * 1024.0).astype(jnp.int32)
-    q = jnp.clip(q, 0, 1023).astype(U32)
+    q = _quantize(unit_points, 1 << 10)
     return _interleave10(q[..., 0], q[..., 1], q[..., 2])
 
 
@@ -70,9 +83,7 @@ def morton64(unit_points: jax.Array) -> tuple[jax.Array, jax.Array]:
     21 bits per dimension. float32 has a 24-bit mantissa so quantization to
     2^21 bins is exact for unit-interval inputs.
     """
-    q = jnp.floor(unit_points * float(1 << 21)).astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
-    # Without x64, 2^21-1 = 2097151 fits int32 comfortably.
-    q = jnp.clip(q, 0, (1 << 21) - 1).astype(U32)
+    q = _quantize(unit_points, 1 << 21)
     x, y, z = q[..., 0], q[..., 1], q[..., 2]
 
     low = _interleave10(x & U32(0x3FF), y & U32(0x3FF), z & U32(0x3FF))          # bits 0..29

@@ -136,11 +136,30 @@ class RayResult(NamedTuple):
 class DeviceCsr(NamedTuple):
     """Device-resident CSR output. ``indices`` is bound-sized (``capacity``);
     ``total`` is the true hit count (a device scalar — may exceed capacity,
-    in which case ``overflowed`` is set and surplus hits were dropped)."""
-    offsets: jax.Array     # (q+1,) int32 exclusive-scan row starts
+    in which case ``overflowed`` is set and surplus hits were dropped).
+    ``offsets``/``total`` carry the caller's ``index_dtype`` (int32 by
+    default; pass int64 under x64 when total hits can exceed 2^31 — the
+    exascale configuration the scale-safety analyzer proves out)."""
+    offsets: jax.Array     # (q+1,) index_dtype exclusive-scan row starts
     indices: jax.Array     # (capacity,) int32, -1 padded past ``total``
-    total: jax.Array       # () int32
+    total: jax.Array       # () index_dtype
     overflowed: jax.Array  # () bool
+
+
+def _canon_index_dtype(index_dtype):
+    """Validate an offsets dtype. Requesting int64 with x64 disabled is a
+    hard error: JAX would silently stage int32 and the cumsum could wrap
+    past 2^31 hits (staticcheck rule W1)."""
+    dt = jnp.dtype(index_dtype)
+    if dt not in (jnp.dtype(jnp.int32), jnp.dtype(jnp.int64)):
+        raise ValueError(f"index_dtype must be int32 or int64, got {dt}")
+    if dt == jnp.dtype(jnp.int64) and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "index_dtype=int64 requires x64 mode "
+            "(jax.experimental.enable_x64() or jax_enable_x64=True); "
+            "without it JAX silently truncates to int32 and CSR offsets "
+            "overflow once total hits exceed 2^31")
+    return dt
 
 
 class BufferedCsr(NamedTuple):
@@ -918,13 +937,15 @@ def query_fixed(bvh: Bvh, predicates, capacity: int, *,
     return buf, counts, jnp.any(counts > capacity)
 
 
-def _compact_csr(buf: jax.Array, counts: jax.Array):
+def _compact_csr(buf: jax.Array, counts: jax.Array,
+                 index_dtype=jnp.int32):
     """Scatter per-query buffers (q, cap) into CSR (offsets, indices)."""
+    idx_dt = _canon_index_dtype(index_dtype)
     q, cap = buf.shape
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts).astype(jnp.int32)])
+    offsets = jnp.concatenate([jnp.zeros((1,), idx_dt),
+                               jnp.cumsum(counts, dtype=idx_dt)])
     total = int(offsets[-1]) if q else 0
-    pos = offsets[:-1, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    pos = offsets[:-1, None] + jnp.arange(cap, dtype=idx_dt)[None, :]
     valid = jnp.arange(cap)[None, :] < counts[:, None]
     # invalid lanes write to a trash slot past the end
     indices = jnp.full((total + 1,), -1, jnp.int32).at[
@@ -1050,7 +1071,8 @@ def _csr_fill(bvh: Bvh, pred, offsets: jax.Array, capacity: int, *,
 
 def query_csr_device(bvh: Bvh, predicates, capacity: int, *, counts=None,
                      chunk: int = 32, backend: str = "stackless",
-                     sort_queries: bool = False) -> DeviceCsr:
+                     sort_queries: bool = False,
+                     index_dtype=jnp.int32) -> DeviceCsr:
     """Fully DEVICE-RESIDENT scan-then-scatter CSR (the ArborX 2.0
     count-then-fill backbone, with no host round-trip): pass 1 counts per
     predicate, an on-device exclusive scan produces per-query offsets, and
@@ -1062,16 +1084,18 @@ def query_csr_device(bvh: Bvh, predicates, capacity: int, *, counts=None,
     ``(q, max_count)`` staging buffer (staging is O(q * chunk)). Returns
     ``DeviceCsr(offsets, indices, total, overflowed)``; hits past
     ``capacity`` are dropped and flagged. ``counts`` may be passed to reuse
-    a precomputed pass 1."""
+    a precomputed pass 1. ``index_dtype`` sets the offsets/total dtype —
+    int64 (under x64) once total hits can exceed 2^31."""
     if backend == "pair":
         raise ValueError("output protocols are per-query; the pair backend's "
                          "half-lists need a callback (use query(...))")
+    idx_dt = _canon_index_dtype(index_dtype)
     capacity = max(int(capacity), 0)
     if counts is None:
         counts = query_count(bvh, predicates, backend=backend,
                              sort_queries=sort_queries)
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts).astype(jnp.int32)])
+    offsets = jnp.concatenate([jnp.zeros((1,), idx_dt),
+                               jnp.cumsum(counts, dtype=idx_dt)])
     indices = _csr_fill(bvh, predicates, offsets, capacity, chunk=chunk,
                         backend=backend, sort_queries=sort_queries)
     total = offsets[-1]
@@ -1081,7 +1105,7 @@ def query_csr_device(bvh: Bvh, predicates, capacity: int, *, counts=None,
 
 def query_csr(bvh: Bvh, predicates, *, capacity: int | None = None,
               chunk: int = 32, backend: str = "stackless",
-              sort_queries: bool = False) -> DeviceCsr:
+              sort_queries: bool = False, index_dtype=jnp.int32) -> DeviceCsr:
     """Count-then-fill CSR output (§4.1), device-resident. With
     ``capacity`` given this IS ``query_csr_device`` (jit-traceable, zero
     host syncs). With ``capacity=None`` (the dynamic-shape convenience,
@@ -1095,13 +1119,15 @@ def query_csr(bvh: Bvh, predicates, *, capacity: int | None = None,
     ``[0]``, indices empty)."""
     if capacity is not None:
         return query_csr_device(bvh, predicates, capacity, chunk=chunk,
-                                backend=backend, sort_queries=sort_queries)
+                                backend=backend, sort_queries=sort_queries,
+                                index_dtype=index_dtype)
     counts = query_count(bvh, predicates, backend=backend,
                          sort_queries=sort_queries)
     exact = int(jnp.sum(counts)) if counts.shape[0] else 0
     return query_csr_device(bvh, predicates, exact, counts=counts,
                             chunk=chunk, backend=backend,
-                            sort_queries=sort_queries)
+                            sort_queries=sort_queries,
+                            index_dtype=index_dtype)
 
 
 def query_csr_buffered(bvh: Bvh, predicates, *, capacity: int = 8,

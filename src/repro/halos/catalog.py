@@ -42,7 +42,16 @@ from repro.kernels import ref as _kref
 from repro.kernels import segment as _kseg
 
 NOISE = jnp.int32(-1)
-_SORT_LAST = jnp.int32(2 ** 31 - 1)
+
+
+def _sort_last(dtype):
+    """The sort-to-the-back sentinel for a label dtype: iinfo max, so int64
+    global labels (distributed runs past 2^31 points) keep a sentinel above
+    every real root instead of colliding with hard-coded 2^31-1."""
+    return jnp.asarray(jnp.iinfo(jnp.dtype(dtype)).max, dtype)
+
+
+_SORT_LAST = _sort_last(jnp.int32)  # legacy alias for int32-label callers
 
 __all__ = [
     "NOISE",
@@ -61,7 +70,7 @@ class HaloCatalog(NamedTuple):
 
     num_halos: jax.Array      # () int32 — halos surviving the mass cut
     overflow: jax.Array       # () bool — provisional halos exceeded capacity
-    root: jax.Array           # (H,) int32 — DBSCAN root label, -1 empty
+    root: jax.Array           # (H,) label dtype — DBSCAN root label, -1 empty
     count: jax.Array          # (H,) int32 — particles in halo
     mass: jax.Array           # (H,) f32 — count * particle_mass
     center: jax.Array         # (H, d) f32 — center of mass
@@ -101,9 +110,10 @@ def canonicalize_labels(labels: jax.Array, capacity: int):
     halos beyond capacity)."""
     n = labels.shape[0]
     valid = labels >= 0
-    perm = jnp.argsort(jnp.where(valid, labels, _SORT_LAST),
+    sl = _sort_last(labels.dtype)
+    perm = jnp.argsort(jnp.where(valid, labels, sl),
                        stable=True).astype(jnp.int32)
-    lab_s = labels[perm].astype(jnp.int32)
+    lab_s = labels[perm]  # keeps the label dtype (int64 global ids at scale)
     valid_s = valid[perm]
     idx = jnp.arange(n, dtype=jnp.int32)
     head = valid_s & ((idx == 0) | (lab_s != jnp.roll(lab_s, 1)))
@@ -131,9 +141,10 @@ def feature_sums(points, velocities, labels, *, capacity: int,
         [w, pts_s * w, vel_s * w,
          jnp.sum(vel_s ** 2, axis=-1, keepdims=True) * w], axis=1)
     sums = _seg_sum(feats, pid_s, capacity, backend)
-    root = jnp.full((capacity,), _SORT_LAST, jnp.int32) \
-        .at[pid_s].min(jnp.where(member_s, lab_s, _SORT_LAST))
-    root = jnp.where(root == _SORT_LAST, NOISE, root)
+    sl = _sort_last(lab_s.dtype)
+    root = jnp.full((capacity,), sl, lab_s.dtype) \
+        .at[pid_s].min(jnp.where(member_s, lab_s, sl))
+    root = jnp.where(root == sl, NOISE, root).astype(lab_s.dtype)
     return sums, root, overflow, perm, pid_s, member_s
 
 

@@ -39,7 +39,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.halos import catalog as _cat
-from repro.halos.catalog import HaloCatalog, NOISE, _SORT_LAST
+from repro.halos.catalog import HaloCatalog, NOISE, _sort_last
 from repro.kernels.segment import SEG_NEG_BIG
 
 __all__ = [
@@ -59,7 +59,7 @@ __all__ = [
 class PartialCatalog(NamedTuple):
     """Per-shard halo sums keyed by GLOBAL root label (-1 = empty row)."""
 
-    root: jax.Array      # (H,) int32
+    root: jax.Array      # (H,) label dtype (int64 global ids at scale)
     sums: jax.Array      # (H, 2d+2) f32 — [count, Σx, Σv, Σ|v|²]
     overflow: jax.Array  # () bool
 
@@ -95,9 +95,10 @@ def merge_partial_catalogs(roots: jax.Array, sums: jax.Array, *,
     # Merged rows count is small (S·H) — the plain scatter oracle is right.
     merged = jnp.zeros((capacity, sums.shape[1]), jnp.float32) \
         .at[pid_s].add(rows)
-    root_m = jnp.full((capacity,), _SORT_LAST, jnp.int32) \
-        .at[pid_s].min(jnp.where(member_s, root_s, _SORT_LAST))
-    root_m = jnp.where(root_m == _SORT_LAST, NOISE, root_m)
+    sl = _sort_last(root_s.dtype)
+    root_m = jnp.full((capacity,), sl, root_s.dtype) \
+        .at[pid_s].min(jnp.where(member_s, root_s, sl))
+    root_m = jnp.where(root_m == sl, NOISE, root_m).astype(root_s.dtype)
 
     (num_halos, root, count, mass, center, vmean, vdisp, _slot) = \
         _cat.derive_catalog(merged, root_m, min_count, particle_mass, d)
@@ -112,7 +113,7 @@ def particle_slots(labels: jax.Array, cat: HaloCatalog) -> jax.Array:
     """Root label per particle -> catalog slot (-1 if noise/cut), via
     searchsorted on the catalog's ascending-root valid prefix."""
     capacity = cat.root.shape[0]
-    key = jnp.where(cat.count > 0, cat.root, _SORT_LAST)
+    key = jnp.where(cat.count > 0, cat.root, _sort_last(cat.root.dtype))
     pos = jnp.searchsorted(key, jnp.maximum(labels, 0)).astype(jnp.int32)
     pos_c = jnp.clip(pos, 0, capacity - 1)
     found = (labels >= 0) & (pos < capacity) & (key[pos_c] == labels)
@@ -206,13 +207,14 @@ def _pipeline_sharded_gated(fn):
         fn, static_argnames=("min_pts", "capacity", "halo_cap", "axis",
                              "mesh_ref", "min_count", "particle_mass",
                              "max_rounds", "backend", "so_delta", "box_volume",
-                             "so_r_max", "so_iters"))
+                             "so_r_max", "so_iters", "index_dtype"))
 
 
 @_pipeline_sharded_gated
 def _pipeline_sharded(points, velocities, eps, min_pts, capacity, halo_cap,
                       axis, mesh_ref, min_count, particle_mass, max_rounds,
-                      backend, so_delta, box_volume, so_r_max, so_iters):
+                      backend, so_delta, box_volume, so_r_max, so_iters,
+                      index_dtype):
     from repro.core.distributed import dbscan_local_shard, shard_context
     from repro.halos.so_mass import so_masses_from_counts, sphere_counts
 
@@ -223,7 +225,8 @@ def _pipeline_sharded(points, velocities, eps, min_pts, capacity, halo_cap,
     def local_fn(pts, vel):
         pts, vel = pts[0], vel[0]
         # --- build + exchange + cluster (engine traversals, on device) ------
-        ctx = shard_context(pts, eps, halo_cap, axis, n_shards)
+        ctx = shard_context(pts, eps, halo_cap, axis, n_shards,
+                            index_dtype=index_dtype)
         labels, core, rounds = dbscan_local_shard(
             pts, eps, min_pts, ctx, axis=axis, max_rounds=max_rounds)
         # --- catalog: partial sums -> all_gather -> replicated merge --------
@@ -287,7 +290,8 @@ def halo_pipeline_sharded(points: jax.Array, velocities: jax.Array, eps,
                           max_rounds: int = 64, backend: str = "auto",
                           so_delta: float | None = None,
                           box_volume: float = 1.0, so_r_max: float = 0.25,
-                          so_iters: int = 20, tracer=None) -> HaloPipelineResult:
+                          so_iters: int = 20, index_dtype=jnp.int32,
+                          tracer=None) -> HaloPipelineResult:
     """The paper's exascale pipeline in ONE ``shard_map`` region: per-shard
     BVH build → ε-ghost exchange → distributed DBSCAN → catalog merge →
     max-radius pass → (optionally, with ``so_delta``) SO masses — all engine
@@ -308,7 +312,8 @@ def halo_pipeline_sharded(points: jax.Array, velocities: jax.Array, eps,
         return _pipeline_sharded(
             points, velocities, eps, min_pts, int(capacity), halo_cap, axis,
             _mesh_ref(mesh), min_count, float(particle_mass), max_rounds,
-            backend, so_delta, float(box_volume), float(so_r_max), so_iters)
+            backend, so_delta, float(box_volume), float(so_r_max), so_iters,
+            jnp.dtype(index_dtype))
 
     if tracer is None:
         return run()
@@ -328,7 +333,8 @@ def halo_pipeline_traced(points: jax.Array, velocities: jax.Array, eps,
                          max_rounds: int = 64, backend: str = "auto",
                          so_delta: float | None = None,
                          box_volume: float = 1.0, so_r_max: float = 0.25,
-                         so_iters: int = 20, tracer=None) -> HaloPipelineResult:
+                         so_iters: int = 20, index_dtype=jnp.int32,
+                         tracer=None) -> HaloPipelineResult:
     """The STAGED pipeline — ``dbscan_distributed`` → ``halo_catalog_sharded``
     → ``so_masses`` as separate launches, each in its own fenced span, so a
     Perfetto trace shows where the time goes. Produces the same result as
@@ -342,7 +348,7 @@ def halo_pipeline_traced(points: jax.Array, velocities: jax.Array, eps,
     def run():
         dd = dbscan_distributed(points, eps, min_pts, mesh=mesh, axis=axis,
                                 halo_cap=halo_cap, max_rounds=max_rounds,
-                                tracer=tracer)
+                                index_dtype=index_dtype, tracer=tracer)
         cat = traced(tracer, "halo_catalog_sharded", halo_catalog_sharded,
                      points, velocities, dd.labels, mesh=mesh, axis=axis,
                      capacity=int(capacity), min_count=min_count,

@@ -1,7 +1,7 @@
 """``repro.staticcheck`` — the repo's performance rules as machine-checked
 gates (the ReFrame idea applied to program STRUCTURE instead of timings).
 
-Two layers:
+Three layers:
 
 * **jaxpr audits** (``jaxpr_audit``): trace a callable and enforce
   device-discipline invariants on every sub-jaxpr —
@@ -15,15 +15,43 @@ Two layers:
   over ``src/repro`` (BVH loops only in the engine, gated shard_map
   jits, consumed CSR overflow flags, guarded min-image folds), with
   ``# staticcheck: <token>`` opt-out pragmas.
+* **scale-safety abstract interpreter** (``absint``): propagates a
+  value interval per array through the traced jaxpr and re-reads the
+  staged toy sizes as symbolic exascale N — proving the W rules below
+  without ever materializing a large array.
+
+  ====  =================  ==================================================
+  rule  name               fires when (at symbolic N)
+  ====  =================  ==================================================
+  W1    index-width        a signed-int result escapes its dtype (int32
+                           ``counts→cumsum→offsets`` past 2^31 total hits;
+                           ``shard*n_local+i`` global ids; narrowing
+                           converts). Unsigned arithmetic wraps silently —
+                           Morton magic multiplies stay legal.
+  W2    precision          a float quantization (round/floor/ceil/f→i
+                           convert) sees magnitude ≥ 2^mantissa — the
+                           ``round(BIG/L)*L == BIG`` min-image trap; with
+                           ``precision_floor``, catastrophic cancellation.
+  W3    bounds & routes    a PROMISE_IN_BOUNDS gather/scatter index not
+                           provably inside the symbolic axis; ``ppermute``
+                           tables that are not partial permutations;
+                           collective axis names outside the enclosing mesh.
+  ====  =================  ==================================================
+
+  ``absint_registry.REGISTERED_ABSINT_AUDITS`` pins the production
+  (int64-widened) configurations clean; ``SEEDED_FIXTURES`` pins each
+  rule firing on the historical trap it encodes.
 
 CLI::
 
     PYTHONPATH=src python -m repro.staticcheck            # AST lint
     PYTHONPATH=src python -m repro.staticcheck --jaxpr --fast
+    PYTHONPATH=src python -m repro.staticcheck --absint   # scale safety
     PYTHONPATH=src python -m repro.staticcheck --json report.json
 
 Exit status is nonzero iff any finding fired; the JSON report carries
-``file:line`` anchors for each.
+``file:line`` anchors for each (``--absint`` also writes
+``absint_report.json`` with per-entrypoint coverage counters).
 """
 from repro.staticcheck.findings import Finding, report_dict, write_report
 from repro.staticcheck.jaxpr_audit import (
@@ -49,6 +77,22 @@ from repro.staticcheck.registry import (
     REGISTERED_AUDITS,
     run_registered_audits,
 )
+from repro.staticcheck.absint import (
+    AbsintReport,
+    CollectiveUse,
+    SymbolicScale,
+    analyze,
+    analyze_jaxpr,
+    audit_routes,
+    scale_for,
+)
+from repro.staticcheck.absint_registry import (
+    AbsintAudit,
+    REGISTERED_ABSINT_AUDITS,
+    SEEDED_FIXTURES,
+    absint_coverage,
+    run_absint_audits,
+)
 
 __all__ = [
     "Finding", "report_dict", "write_report",
@@ -57,4 +101,8 @@ __all__ = [
     "max_intermediate_elems", "no_dense_intermediate", "no_host_transfer",
     "BVH_NODE_FIELDS", "CSR_PRODUCERS", "RULES", "lint_paths", "lint_source",
     "Audit", "REGISTERED_AUDITS", "run_registered_audits",
+    "AbsintReport", "CollectiveUse", "SymbolicScale", "analyze",
+    "analyze_jaxpr", "audit_routes", "scale_for",
+    "AbsintAudit", "REGISTERED_ABSINT_AUDITS", "SEEDED_FIXTURES",
+    "absint_coverage", "run_absint_audits",
 ]

@@ -1,11 +1,13 @@
-"""CLI: ``python -m repro.staticcheck [paths...] [--jaxpr] [--fast]
-[--json REPORT] [--rules R1,R3]``.
+"""CLI: ``python -m repro.staticcheck [paths...] [--jaxpr] [--absint]
+[--fast] [--json REPORT] [--absint-json REPORT] [--rules R1,R3]``.
 
 Runs the AST lint over the given paths (default: the installed
 ``repro`` package source, i.e. ``src/repro``) and, with ``--jaxpr``,
-the registered jaxpr audits. Prints one ``file:line: [rule] message``
-line per finding, writes the JSON report, and exits nonzero iff any
-finding fired — the CI gate.
+the registered jaxpr audits; with ``--absint``, the scale-safety
+abstract-interpreter audits (W1 index-width / W2 precision / W3 bounds
+& routes at symbolic N — see ``repro.staticcheck.absint``). Prints one
+``file:line: [rule] message`` line per finding, writes the JSON
+report(s), and exits nonzero iff any finding fired — the CI gate.
 """
 from __future__ import annotations
 
@@ -32,10 +34,18 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--jaxpr", action="store_true",
                     help="also run the registered jaxpr audits (traces the "
                          "repo's device pipelines)")
+    ap.add_argument("--absint", action="store_true",
+                    help="run the scale-safety abstract-interpreter audits "
+                         "(index-width / precision / route invariants at "
+                         "symbolic exascale N)")
     ap.add_argument("--fast", action="store_true",
-                    help="smaller problem sizes for the jaxpr audits")
+                    help="smaller problem sizes for the jaxpr audits; skips "
+                         "the slowest absint trace")
     ap.add_argument("--json", default="staticcheck_report.json",
                     help="JSON report path (default: %(default)s)")
+    ap.add_argument("--absint-json", default="absint_report.json",
+                    help="absint JSON report path, written only with "
+                         "--absint (default: %(default)s)")
     args = ap.parse_args(argv)
 
     rules = None
@@ -54,6 +64,27 @@ def main(argv: list[str] | None = None) -> int:
         jf, audit_names = run_registered_audits(fast=args.fast)
         findings = findings + jf
 
+    absint_names: list[str] = []
+    if args.absint:
+        import dataclasses as _dc
+        import json as _json
+
+        from repro.staticcheck.absint_registry import run_absint_audits
+        af, reports = run_absint_audits(fast=args.fast)
+        findings = findings + af
+        absint_names = [r.name for r in reports]
+        pathlib.Path(args.absint_json).write_text(_json.dumps({
+            "ok": not af,
+            "entrypoints": [{
+                "name": r.name,
+                "values_analyzed": r.values_analyzed,
+                "eqns_visited": r.eqns_visited,
+                "unknown_prims": r.unknown_prims,
+                "collectives": len(r.collectives),
+                "findings": [_dc.asdict(f) for f in r.findings],
+            } for r in reports],
+        }, indent=2) + "\n")
+
     for f in findings:
         print(f)
     write_report(args.json, findings, checked_files=checked,
@@ -62,6 +93,9 @@ def main(argv: list[str] | None = None) -> int:
                f"file(s)")
     if audit_names:
         summary += f" + {len(audit_names)} jaxpr audit(s)"
+    if absint_names:
+        summary += (f" + {len(absint_names)} absint audit(s) "
+                    f"-> {args.absint_json}")
     print(summary + f"; report -> {args.json}")
     return 1 if findings else 0
 
