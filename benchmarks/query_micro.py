@@ -10,7 +10,10 @@ so the cost of each output protocol is tracked per backend:
              single-pass buffered CSR (the §4.1 buffer optimization —
              timed with a capacity that holds, i.e. the zero-retry
              common case),
-  backends:  stackless (rope) and stack traversal, plus the pair
+  backends:  stackless (rope), stack, and the Pallas wavefront kernel
+             (interpret mode on CPU — the column tracks dispatch/padding
+             overhead there; native timings need a TPU, see
+             benchmarks/kernels_micro.py and REPRO_TPU=1), plus the pair
              backend's fused count for the self-join workloads.
 
 Emits the usual CSV lines plus a ``BENCH_query.json`` artifact so CSR
@@ -47,21 +50,22 @@ def _grid(n: int, results: dict) -> None:
             return c + 1, jnp.bool_(False)
         return query(bvh, pred, cb, jnp.int32(0), backend="pair")
 
+    backends = ("stackless", "stack", "pallas")
     runs = [("count", b, lambda b=b: query_count(bvh, pred, backend=b))
-            for b in ("stackless", "stack")]
+            for b in backends]
     runs += [("csr_two_pass", b,
               lambda b=b: query_csr(bvh, pred, backend=b).indices)
-             for b in ("stackless", "stack")]
+             for b in backends]
     # device-resident CSR: fixed capacity, no host sync anywhere
     cap_dev = n * cap0
     runs += [("csr_device", b,
               lambda b=b: query_csr_device(bvh, pred, cap_dev,
                                            backend=b).indices)
-             for b in ("stackless", "stack")]
+             for b in backends]
     runs += [("csr_buffered", b,
               lambda b=b: query_csr_buffered(bvh, pred, capacity=cap0,
                                              backend=b).indices)
-             for b in ("stackless", "stack")]
+             for b in backends]
     runs.append(("count", "pair", pair_count))
 
     for protocol, backend, fn in runs:

@@ -92,7 +92,10 @@ def _query_cases(fast: bool, results: dict) -> None:
     max_count = int(jnp.max(query_count(bvh, within(jp, eps))))
     cap = n * (1 << max(1, int(np.ceil(np.log2(max(max_count, 2))))))
 
-    for backend in ("stackless", "stack"):
+    # pallas = the wavefront kernel program; XLA's cost model sees the
+    # pallas_call as one fused launch, so its flops/bytes reflect the
+    # staging around the kernel — the row tracks launch + padding cost.
+    for backend in ("stackless", "stack", "pallas"):
         _roofline_case(
             f"roofline/query_count_{backend}_n{n}",
             lambda p, b=backend: query_count(bvh, within(p, eps), backend=b),

@@ -78,6 +78,28 @@ nn = query(bvh, nearest(jp[:8], k=4))
 print(f"query API: {int((counts >= min_pts).sum())} core points, "
       f"CSR nnz={int(offsets[-1])}, knn[0]={np.asarray(nn.indices[0])}")
 
+# 5. picking a backend. Every spatial call above takes `backend=`:
+#
+#      backend="stackless"  (default) vmapped rope traversal — one scalar
+#                           while-loop per query, XLA schedules the batch.
+#      backend="stack"      explicit-stack twin, mainly a correctness oracle.
+#      backend="pallas"     ONE batched Pallas wavefront kernel: a block of
+#                           Morton-sorted queries advances through the tree
+#                           in lockstep, rope hops + fused callback inside a
+#                           single while-loop — the GPU-style traversal the
+#                           paper credits for its largest wins (§4). Pick it
+#                           on TPU targets; on CPU it runs in interpret mode
+#                           (correct but slow — CI exercises it that way).
+#
+#    All three return identical results for query / query_count / query_csr
+#    / query_csr_device / query_csr_buffered, including `with_stats=` and
+#    `start_nodes=` (cell-grid pruned starts). `nearest()` is the exception:
+#    its priority-queue carry is stackless/stack only for now.
+counts_p = query_count(bvh, within(jp, eps), backend="pallas",
+                       sort_queries=True)
+assert bool(jnp.array_equal(counts_p, query_count(bvh, within(jp, eps),
+                                                  sort_queries=True)))
+
 # --- observability -----------------------------------------------------------
 # Every §4 win in the paper (early termination, stackless ropes, pair
 # traversal) came from MEASURING traversal behaviour. `with_stats=True` on

@@ -19,14 +19,19 @@ analysis — converged on a SINGLE dispatcher with
   convenience ``query_csr``, and a single-pass fixed-capacity variant with
   overflow detection and doubling retry (``query_csr_buffered``, the §4.1
   buffer optimization, retry count observable),
-* **traversal backends** (``stackless`` rope / ``stack`` / ``pair``)
-  selectable per call, and engine-level Morton **query sorting** (§4.2.2)
-  so every client inherits traversal-coherence improvements at once.
+* **traversal backends** (``stackless`` rope / ``stack`` / ``pallas``
+  wavefront kernel / ``pair``) selectable per call, and engine-level
+  Morton **query sorting** (§4.2.2) so every client inherits
+  traversal-coherence improvements at once.
 
 Clients (``knn``, ``raycast``, ``dbscan``, ``correlation``,
 ``interpolate``, ``emst``, ``halos/*``) are thin wrappers over this
-module; a future Pallas wavefront-traversal kernel drops in as one more
-backend here instead of N bespoke loops.
+module; the Pallas wavefront-traversal kernel
+(``kernels/wavefront.py``) IS one more backend here — ``backend=
+"pallas"`` — instead of N bespoke loops: a block of Morton-sorted
+queries per grid step advances the rope traversal in lockstep with the
+callback fused as the epilogue, and every protocol (counts, fixed
+buffers, device CSR) rides it unchanged.
 
 Layering:
 
@@ -411,6 +416,13 @@ def traverse(bvh: Bvh, qdata, node_fn: Callable, leaf_fn: Callable, carry_init,
         return jax.vmap(
             lambda q, c: _one_stack(bvh, q, node_fn, leaf_fn, c)
         )(qdata, carries)
+    if backend == "pallas":
+        raise ValueError(
+            "backend='pallas' is dispatched by the engine entry points "
+            "(query/query_count/query_csr_device/...), not the generic "
+            "traverse driver: the wavefront kernel must rebuild its "
+            "node_fn/leaf_fn closures inside the kernel, which prebuilt "
+            "user closures cannot do")
     raise ValueError(f"unknown backend {backend!r} (use 'stackless' or 'stack')")
 
 
@@ -540,15 +552,30 @@ def _invert_perm(perm: jax.Array) -> jax.Array:
 # The engine: predicate dispatch + fused-callback protocol
 # ---------------------------------------------------------------------------
 
-def _spatial_fns(bvh: Bvh, pred):
-    """(qdata_geom, node_fn, leaf_aux) for a spatial predicate. ``leaf_aux``
-    returns (d2, hit) of a leaf node's bounding volume vs the predicate —
-    for point leaves this is the exact point-to-point test."""
+def _pred_geom(pred):
+    """Per-query geometry arrays a spatial predicate contributes to qdata."""
+    if isinstance(pred, Within):
+        return (pred.centers, pred.radii.astype(pred.centers.dtype) ** 2)
+    if isinstance(pred, IntersectsBox):
+        return (pred.lo, pred.hi)
+    if isinstance(pred, Ray):
+        return (pred.origins, pred.directions)
+    raise TypeError(f"not a spatial predicate: {type(pred).__name__}")
+
+
+def _pred_fns(bvh, kind):
+    """(node_fn, leaf_aux) for predicate type ``kind`` against ``bvh``.
+
+    ``bvh`` may be the engine's :class:`Bvh` or the wavefront kernel's
+    in-kernel ``TreeView`` — the Pallas backend re-invokes this factory
+    INSIDE the kernel so the closures capture kernel-local array views
+    rather than outer tracers (which a Pallas body must not close over).
+    ``leaf_aux`` returns (d2, hit) of a leaf node's bounding volume vs the
+    predicate — for point leaves this is the exact point-to-point test.
+    """
     n = bvh.num_leaves
 
-    if isinstance(pred, Within):
-        geom = (pred.centers, pred.radii.astype(pred.centers.dtype) ** 2)
-
+    if issubclass(kind, Within):
         def node_fn(q, carry, node):
             (_, center, r2) = q
             return point_aabb_dist2(center, bvh.node_lo[node], bvh.node_hi[node]) <= r2
@@ -559,11 +586,9 @@ def _spatial_fns(bvh: Bvh, pred):
             d2 = point_aabb_dist2(center, bvh.node_lo[leaf_node], bvh.node_hi[leaf_node])
             return d2, d2 <= r2
 
-        return geom, node_fn, leaf_aux
+        return node_fn, leaf_aux
 
-    if isinstance(pred, IntersectsBox):
-        geom = (pred.lo, pred.hi)
-
+    if issubclass(kind, IntersectsBox):
         def node_fn(q, carry, node):
             (_, qlo, qhi) = q
             return aabb_aabb_dist2(qlo, qhi, bvh.node_lo[node], bvh.node_hi[node]) <= 0.0
@@ -574,15 +599,13 @@ def _spatial_fns(bvh: Bvh, pred):
             d2 = aabb_aabb_dist2(qlo, qhi, bvh.node_lo[leaf_node], bvh.node_hi[leaf_node])
             return d2, d2 <= 0.0
 
-        return geom, node_fn, leaf_aux
+        return node_fn, leaf_aux
 
-    if isinstance(pred, Ray):
+    if issubclass(kind, Ray):
         # All-intersections ray mode: the predicate is "the ray's slab test
         # hits the leaf volume"; callbacks receive the ENTRY PARAMETER t in
         # the last argument slot (the quantity the nearest-hit protocol ranks
         # by), not a squared distance.
-        geom = (pred.origins, pred.directions)
-
         def node_fn(q, carry, node):
             (_, origin, direction) = q
             _, hit = _ray_box(origin, _safe_inv(direction),
@@ -596,9 +619,41 @@ def _spatial_fns(bvh: Bvh, pred):
                               bvh.node_lo[leaf_node], bvh.node_hi[leaf_node])
             return t, hit
 
-        return geom, node_fn, leaf_aux
+        return node_fn, leaf_aux
 
-    raise TypeError(f"not a spatial predicate: {type(pred).__name__}")
+    raise TypeError(f"not a spatial predicate: {kind.__name__}")
+
+
+def _spatial_fns(bvh: Bvh, pred):
+    """(qdata_geom, node_fn, leaf_aux) for a spatial predicate."""
+    node_fn, leaf_aux = _pred_fns(bvh, type(pred))
+    return _pred_geom(pred), node_fn, leaf_aux
+
+
+def _fused_leaf_fn(leaf_aux, callback):
+    """The engine's fused-callback leaf test: run the predicate's leaf_aux,
+    invoke the user callback only on hits, early-exit when it says done.
+    One definition shared by the vmapped cores and the wavefront kernel
+    (which rebuilds it inside the kernel from a kernel-local leaf_aux)."""
+    def leaf_fn(q, carry, obj, sorted_idx):
+        d2, hit = leaf_aux(q, sorted_idx)
+        carry2, done2 = callback(carry, q[0], obj, d2)
+        carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
+        return carry, hit & done2
+    return leaf_fn
+
+
+def _fused_leaf_fn_stats(leaf_aux, callback):
+    """Stats twin of :func:`_fused_leaf_fn`: augmented carry
+    (user_carry, n_hits) — the engine counts fused-callback invocations
+    itself, then grafts the column into the stats record."""
+    def leaf_fn(q, carry_h, obj, sorted_idx):
+        carry, nh = carry_h
+        d2, hit = leaf_aux(q, sorted_idx)
+        carry2, done2 = callback(carry, q[0], obj, d2)
+        carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
+        return (carry, nh + hit.astype(jnp.int32)), hit & done2
+    return leaf_fn
 
 
 def _pred_centers(pred):
@@ -610,7 +665,7 @@ def _pred_centers(pred):
 
 
 def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries,
-                   with_stats=False):
+                   with_stats=False, start_nodes=None):
     geom, node_fn, leaf_aux = _spatial_fns(bvh, pred)
     q_count = jax.tree.leaves(geom)[0].shape[0]
     qidx = jnp.arange(q_count, dtype=jnp.int32)
@@ -619,21 +674,47 @@ def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries,
     if sort_queries:
         perm = query_sort_permutation(bvh, _pred_centers(pred))
         qdata = _apply_sort(perm, qdata)
+        if start_nodes is not None:
+            start_nodes = jnp.take(start_nodes, perm, axis=0)
+
+    if backend == "pallas":
+        # Wavefront kernel backend: the factory re-derives node_fn/leaf_fn
+        # inside the kernel from its TreeView (a Pallas body must not
+        # close over outer traced arrays). ``kind`` (a type) and the
+        # engine's own callbacks are capture-safe.
+        from repro.kernels.wavefront import wavefront_traverse
+        kind = type(pred)
+        if with_stats:
+            def make_fns_s(tree):
+                nf, la = _pred_fns(tree, kind)
+                return nf, _fused_leaf_fn_stats(la, callback)
+
+            (out, hits), raw = wavefront_traverse(
+                bvh, qdata, make_fns_s, (carry_init, jnp.int32(0)),
+                start_nodes=start_nodes, with_stats=True,
+                depths=_node_depths(bvh))
+            stats = _stats_from_raw(raw, callback_hits=hits)
+            if sort_queries:
+                inv = _invert_perm(perm)
+                out = _apply_sort(inv, out)
+                stats = TraversalStats(*_apply_sort(inv, tuple(stats)))
+            return out, stats
+
+        def make_fns(tree):
+            nf, la = _pred_fns(tree, kind)
+            return nf, _fused_leaf_fn(la, callback)
+
+        out = wavefront_traverse(bvh, qdata, make_fns, carry_init,
+                                 start_nodes=start_nodes)
+        if sort_queries:
+            out = _apply_sort(_invert_perm(perm), out)
+        return out
 
     if with_stats:
-        # Augmented carry (user_carry, n_hits): the engine counts fused-
-        # callback invocations itself, then grafts the column into the
-        # stats record the traversal cores produce.
-        def leaf_fn_s(q, carry_h, obj, sorted_idx):
-            carry, nh = carry_h
-            d2, hit = leaf_aux(q, sorted_idx)
-            carry2, done2 = callback(carry, q[0], obj, d2)
-            carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
-            return (carry, nh + hit.astype(jnp.int32)), hit & done2
-
+        leaf_fn_s = _fused_leaf_fn_stats(leaf_aux, callback)
         (out, hits), stats = traverse(
             bvh, qdata, node_fn, leaf_fn_s, (carry_init, jnp.int32(0)),
-            backend=backend, with_stats=True)
+            backend=backend, start_nodes=start_nodes, with_stats=True)
         stats = stats._replace(callback_hits=hits)
         if sort_queries:
             inv = _invert_perm(perm)
@@ -641,13 +722,9 @@ def _spatial_query(bvh, pred, callback, carry_init, backend, sort_queries,
             stats = TraversalStats(*_apply_sort(inv, tuple(stats)))
         return out, stats
 
-    def leaf_fn(q, carry, obj, sorted_idx):
-        d2, hit = leaf_aux(q, sorted_idx)
-        carry2, done2 = callback(carry, q[0], obj, d2)
-        carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
-        return carry, hit & done2
-
-    out = traverse(bvh, qdata, node_fn, leaf_fn, carry_init, backend=backend)
+    leaf_fn = _fused_leaf_fn(leaf_aux, callback)
+    out = traverse(bvh, qdata, node_fn, leaf_fn, carry_init, backend=backend,
+                   start_nodes=start_nodes)
     if sort_queries:
         out = _apply_sort(_invert_perm(perm), out)
     return out
@@ -675,26 +752,14 @@ def _pair_query(bvh, pred, callback, carry_init, with_stats=False):
     starts = bvh.rope[jnp.arange(n, dtype=jnp.int32) + (n - 1)]
 
     if with_stats:
-        def leaf_fn_s(q, carry_h, obj, sorted_idx):
-            carry, nh = carry_h
-            d2, hit = leaf_aux(q, sorted_idx)
-            carry2, done2 = callback(carry, q[0], obj, d2)
-            carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
-            return (carry, nh + hit.astype(jnp.int32)), hit & done2
-
+        leaf_fn_s = _fused_leaf_fn_stats(leaf_aux, callback)
         (out, hits), stats = traverse(
             bvh, qdata, node_fn, leaf_fn_s, (carry_init, jnp.int32(0)),
             backend="stackless", start_nodes=starts, with_stats=True)
         return out, stats._replace(callback_hits=hits)
 
-    def leaf_fn(q, carry, obj, sorted_idx):
-        d2, hit = leaf_aux(q, sorted_idx)
-        carry2, done2 = callback(carry, q[0], obj, d2)
-        carry = jax.tree.map(lambda a, b: jnp.where(hit, a, b), carry2, carry)
-        return carry, hit & done2
-
-    return traverse(bvh, qdata, node_fn, leaf_fn, carry_init,
-                    backend="stackless", start_nodes=starts)
+    return traverse(bvh, qdata, node_fn, _fused_leaf_fn(leaf_aux, callback),
+                    carry_init, backend="stackless", start_nodes=starts)
 
 
 # --- nearest (priority-queue carry inside the engine) -----------------------
@@ -837,13 +902,17 @@ def _ray_query(bvh, pred: Ray, callback, sort_queries):
 
 def query(bvh: Bvh, predicates, callback: Callable | None = None,
           carry_init=None, *, backend: str = "stackless",
-          sort_queries: bool = False, with_stats: bool = False):
+          sort_queries: bool = False, with_stats: bool = False,
+          start_nodes: jax.Array | None = None):
     """The single entry point (§4.1): dispatch ``predicates`` against the
     tree, fusing ``callback`` into the traversal.
 
     * ``Within`` / ``IntersectsBox`` + callback -> per-query final carries.
-      ``backend``: ``stackless`` | ``stack`` | ``pair`` (self-join; carries
-      in sorted leaf order, see ``_pair_query``).
+      ``backend``: ``stackless`` | ``stack`` | ``pallas`` (the wavefront
+      kernel — a block of queries per grid step advances the rope
+      traversal in lockstep; interpret mode on CPU, native on TPU) |
+      ``pair`` (self-join; carries in sorted leaf order, see
+      ``_pair_query``).
     * ``Nearest`` -> ``NearestResult`` (or carries, if a callback is given:
       invoked per result in ascending-distance order).
     * ``Ray`` without callback -> ``RayResult`` (nearest hit). With a
@@ -860,6 +929,10 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
     ``(result, TraversalStats)`` — per-query device-side traversal
     counters, see ``repro.obs.stats``. Off by default; the default path
     stages the identical jaxpr it did before the obs layer existed.
+
+    ``start_nodes`` (stackless/pallas spatial traversals only) overrides
+    the per-query traversal entry node — the cell-grid pruned variants
+    start queries below the root.
     """
     if with_stats and (isinstance(predicates, Nearest)
                        or (isinstance(predicates, Ray) and callback is None)):
@@ -867,6 +940,14 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
             "with_stats instruments the spatial traversal cores; the "
             "nearest / nearest-hit-ray protocols run on the priority-queue "
             "substrate, which has no stats threading")
+    if start_nodes is not None and (
+            isinstance(predicates, Nearest)
+            or (isinstance(predicates, Ray) and callback is None)
+            or backend == "pair"):
+        raise ValueError(
+            "start_nodes applies to the spatial stackless/pallas traversals; "
+            "the nearest protocols have their own ordering and the pair "
+            "backend derives its own start nodes")
     if isinstance(predicates, Nearest):
         return _nearest_query(bvh, predicates, callback, carry_init, sort_queries)
     if isinstance(predicates, Ray):
@@ -875,7 +956,7 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
         if backend == "pair":
             raise ValueError("backend='pair' is a within() self-join")
         return _spatial_query(bvh, predicates, callback, carry_init, backend,
-                              sort_queries, with_stats)
+                              sort_queries, with_stats, start_nodes)
     if not isinstance(predicates, (Within, IntersectsBox)):
         raise TypeError(f"unknown predicate type {type(predicates).__name__}")
     if callback is None:
@@ -887,7 +968,7 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
                              "Morton-sorted; sort_queries does not apply")
         return _pair_query(bvh, predicates, callback, carry_init, with_stats)
     return _spatial_query(bvh, predicates, callback, carry_init, backend,
-                          sort_queries, with_stats)
+                          sort_queries, with_stats, start_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -896,7 +977,8 @@ def query(bvh: Bvh, predicates, callback: Callable | None = None,
 
 def query_count(bvh: Bvh, predicates, *, stop_at: int | None = None,
                 backend: str = "stackless", sort_queries: bool = False,
-                with_stats: bool = False) -> jax.Array:
+                with_stats: bool = False,
+                start_nodes: jax.Array | None = None) -> jax.Array:
     """Per-query intersection counts. ``stop_at`` enables early termination
     (§4.1.2): counting stops (and saturates) at ``stop_at`` — DBSCAN's
     minPts core test needs no exact counts beyond it. ``with_stats=True``
@@ -911,7 +993,8 @@ def query_count(bvh: Bvh, predicates, *, stop_at: int | None = None,
         return count, done
 
     return query(bvh, predicates, cb, jnp.int32(0), backend=backend,
-                 sort_queries=sort_queries, with_stats=with_stats)
+                 sort_queries=sort_queries, with_stats=with_stats,
+                 start_nodes=start_nodes)
 
 
 def query_fixed(bvh: Bvh, predicates, capacity: int, *,
@@ -988,7 +1071,22 @@ def _csr_fill(bvh: Bvh, pred, offsets: jax.Array, capacity: int, *,
                 bvh.leaf_perm[sorted_idx]), buf)
         return buf, nh + take.astype(jnp.int32), is_leaf
 
-    if backend == "stackless":
+    if backend == "pallas":
+        # Wavefront rounds: one kernel launch per chunk round advances every
+        # lane up to `chunk` hits; the factory rebuilds the predicate
+        # closures inside the kernel (Pallas bodies must not capture outer
+        # tracers). Same resumable int32 node cursor as the rope backend.
+        from repro.kernels.wavefront import wavefront_fill_round
+        kind = type(pred)
+        state0 = jnp.zeros((q_count,), jnp.int32)
+
+        def live(state):
+            return state != SENTINEL
+
+        def round_all(state):
+            return wavefront_fill_round(
+                bvh, qdata, lambda tree: _pred_fns(tree, kind), state, chunk)
+    elif backend == "stackless":
         state0 = jnp.zeros((q_count,), jnp.int32)
 
         def live(state):
@@ -1047,7 +1145,11 @@ def _csr_fill(bvh: Bvh, pred, offsets: jax.Array, capacity: int, *,
             return (sp, stack), buf, nh
     else:
         raise ValueError(f"unknown backend {backend!r} for the device CSR "
-                         "path (use 'stackless' or 'stack')")
+                         "path (use 'stackless', 'stack' or 'pallas')")
+
+    if backend != "pallas":
+        def round_all(state):
+            return jax.vmap(round_one)(qdata, state)
 
     lane = jnp.arange(chunk, dtype=jnp.int32)[None, :]
 
@@ -1057,7 +1159,7 @@ def _csr_fill(bvh: Bvh, pred, offsets: jax.Array, capacity: int, *,
 
     def body(loop):
         state, emitted, out = loop
-        state, bufs, nhs = jax.vmap(round_one)(qdata, state)
+        state, bufs, nhs = round_all(state)
         pos = (base + emitted)[:, None] + lane
         ok = (lane < nhs[:, None]) & (pos < capacity)
         out = out.at[jnp.where(ok, pos, capacity).reshape(-1)] \

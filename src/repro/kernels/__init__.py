@@ -4,6 +4,6 @@ queries with fused callbacks (DESIGN.md §2): `pairwise.py` (pl.pallas_call
 ids, the catalog hot loop), `ops.py` (jit'd padded wrappers), `ref.py`
 (pure-jnp oracles for the allclose sweeps in tests/test_kernels.py and
 tests/test_halos.py)."""
-from repro.kernels import ops, ref, segment
+from repro.kernels import ops, ref, segment, wavefront
 
-__all__ = ["ops", "ref", "segment"]
+__all__ = ["ops", "ref", "segment", "wavefront"]

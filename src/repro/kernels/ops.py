@@ -19,18 +19,40 @@ __all__ = [
     "eps_min_label",
     "cell_stencil_counts",
     "cell_stencil_min_label",
+    "round_up",
+    "pad_rows",
+    "pad_rows_edge",
 ]
 
 
-def _round_up(v: int, m: int) -> int:
+def round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-def _pad_rows(a: jax.Array, rows: int, fill) -> jax.Array:
+def pad_rows(a: jax.Array, rows: int, fill) -> jax.Array:
+    """Pad the leading dim of ``a`` to ``rows`` with ``fill``."""
     pad = rows - a.shape[0]
     if pad == 0:
         return a
     return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1), constant_values=fill)
+
+
+def pad_rows_edge(a: jax.Array, rows: int) -> jax.Array:
+    """Pad the leading dim of ``a`` to ``rows`` by replicating the last row.
+
+    Used by the wavefront kernel for per-query payloads: replicated rows carry
+    valid geometry so the kernel math never sees NaN/garbage, while the lane
+    itself is killed by a SENTINEL start node.
+    """
+    pad = rows - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1), mode="edge")
+
+
+# Backward-compatible private aliases (pre-wavefront internal names).
+_round_up = round_up
+_pad_rows = pad_rows
 
 
 def _pad_dim(a: jax.Array, d: int) -> jax.Array:

@@ -9,9 +9,14 @@ they live on device, jit-trace cleanly, and compose with ``vmap`` /
 ``shard_map`` like any other engine output (reduce across shards with
 :meth:`TraversalStats.psum`).
 
-The engine (``core/query.py``) threads these through all three backends
-behind ``with_stats=``; the stats-OFF path stages the exact pre-obs jaxpr
-(machine-checked by the ``stats_path_identity`` audit in
+The engine (``core/query.py``) threads these through all four backends
+behind ``with_stats=`` — the vmapped ``stackless``/``stack`` cores and
+the ``pair`` protocol carry them per scalar traversal, and the
+``pallas`` wavefront kernel accumulates the same columns as masked
+per-lane vectors in its while-loop carry (identical values row-for-row
+to the stackless core on the same query order, pinned by
+``tests/test_wavefront.py``). The stats-OFF path stages the exact
+pre-obs jaxpr (machine-checked by the ``stats_path_identity`` audit in
 ``repro.staticcheck.registry``), so observability is zero-cost when
 disabled.
 """
@@ -44,8 +49,9 @@ class TraversalStats(NamedTuple):
         (§4.1.2 ``CallbackTreeTraversalControl``) rather than exhausting
         the tree.
     ``max_depth``
-        deepest tree level reached (rope backend: node depth of the
-        deepest visited node; stack backend: high-water stack pointer).
+        deepest tree level reached (rope and pallas backends: node depth
+        of the deepest visited node; stack backend: high-water stack
+        pointer).
     """
 
     nodes_visited: jax.Array  # (q,) int32

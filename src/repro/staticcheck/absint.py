@@ -551,6 +551,17 @@ def _eqn(self: _Interp, env, eqn, ctx):
     if prim == "shard_map":
         return _shard_map(self, env, eqn, ctx, ins)
 
+    if prim == "pallas_call":
+        # Pallas kernel bodies operate on Refs through load/store effects —
+        # outside this value lattice (the jaxpr-audit walker in
+        # staticcheck.audits does descend into them). Model the launch
+        # soundly instead: every output covers its full dtype range, so
+        # downstream W1 reasoning stays honest without claiming knowledge
+        # of in-kernel values.
+        for var in eqn.outvars:
+            self._write(env, var, lat.dtype_top(_aval_dtype(var)))
+        return
+
     # --- collectives ------------------------------------------------------
     if prim == "ppermute":
         axes = _axis_names(eqn)

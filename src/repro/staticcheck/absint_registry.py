@@ -258,8 +258,25 @@ def _fixture_bad_route(fast: bool) -> AbsintReport:
                    input_ivals=[Ival(0.0, 1.0)])
 
 
+def _audit_wavefront_pallas(fast: bool) -> AbsintReport:
+    """The wavefront (Pallas) backend at symbolic N: the padded lane
+    bookkeeping around the kernel (arange, pad, slice, the CSR cumsum)
+    must prove its index widths like every other path; the pallas_call
+    itself is an unknown primitive whose outputs fall back to top —
+    soundly silent, never a false positive."""
+    from repro.core.query import query_count
+
+    bvh, pred, _ = _csr_args()
+    return analyze(
+        lambda b, p: query_count(b, p, backend="pallas", sort_queries=True),
+        (bvh, pred),
+        name="query_count[pallas]",
+        scale=SymbolicScale(dims=scale_for(N_STAGE, N_SYM)))
+
+
 REGISTERED_ABSINT_AUDITS: list[AbsintAudit] = [
     AbsintAudit("query_csr_device/int64", _audit_csr_int64),
+    AbsintAudit("query_count/pallas", _audit_wavefront_pallas),
     AbsintAudit("fdbscan", _audit_fdbscan),
     AbsintAudit("fdbscan_pair", _audit_fdbscan_pair),
     AbsintAudit("morton_sort", _audit_morton_sort),

@@ -62,7 +62,10 @@ CSR_PRODUCERS = frozenset({
 })
 
 # Files exempt per rule (matched as posix-path suffixes).
-_ENGINE_FILES = ("core/query.py",)          # R1: the one home of BVH loops
+# R1: the homes of BVH loops — the engine's vmapped cores and the blessed
+# Pallas wavefront kernel module (the engine's backend="pallas"). Any other
+# kernels/ module hand-rolling a rope loop still fires.
+_ENGINE_FILES = ("core/query.py", "kernels/wavefront.py")
 _JIT_GATE_FILES = ("core/distributed.py",)  # R2: home of _maybe_jit/_jit_ok
 
 _PRAGMA_RE = re.compile(r"#\s*staticcheck:\s*([\w,\s-]+)")

@@ -225,8 +225,33 @@ def _audit_obs_stats(fast: bool) -> list[Finding]:
     return findings
 
 
+def _audit_wavefront_backend(fast: bool) -> list[Finding]:
+    """backend='pallas' under the device-discipline rules: the wavefront
+    count pass and the resumable chunked CSR fill must stage no host
+    transfer and no dense buffer — the audit walker descends into the
+    pallas_call kernel jaxpr, so the kernel body is covered too."""
+    from repro.core.query import query_count, query_csr_device
+
+    n = nq = 128 if fast else 256
+    bvh, pred = _skewed_workload(n, nq)
+    dense = nq * n
+    findings = audit_jaxpr(
+        lambda b, p: query_count(b, p, backend="pallas"),
+        (bvh, pred),
+        [no_dense_intermediate(dense), no_host_transfer()],
+        name="query_count_pallas")
+    findings += audit_jaxpr(
+        lambda b, p: query_csr_device(b, p, capacity=n + 64, chunk=16,
+                                      backend="pallas"),
+        (bvh, pred),
+        [no_dense_intermediate(dense), no_host_transfer()],
+        name="query_csr_device_pallas")
+    return findings
+
+
 REGISTERED_AUDITS: list[Audit] = [
     Audit("query_csr_device", _audit_query_csr_device),
+    Audit("kernels/wavefront_backend", _audit_wavefront_backend),
     Audit("fdbscan", _audit_fdbscan),
     Audit("fdbscan_pair", _audit_fdbscan_pair),
     Audit("halo_pipeline_sharded", _audit_halo_pipeline_sharded),

@@ -53,12 +53,13 @@ ADVERSARIAL = ["duplicates", "collinear", "n2", "random"]
 @pytest.mark.parametrize("dataset", ADVERSARIAL)
 @pytest.mark.parametrize("eps", [0.0, 0.25])
 def test_counts_backends_match_bruteforce(dataset, eps):
-    """stackless == stack == numpy brute force, including eps=0 (only exact
-    coincidences count) and all-duplicate / collinear / n=2 point sets."""
+    """stackless == stack == pallas == numpy brute force, including eps=0
+    (only exact coincidences count) and all-duplicate / collinear / n=2
+    point sets."""
     pts = _adversarial(dataset)
     bvh = _bvh(pts)
     want = (_d2(pts, pts) <= np.float32(eps) ** 2).sum(1)
-    for backend in ("stackless", "stack"):
+    for backend in ("stackless", "stack", "pallas"):
         got = np.asarray(query_count(bvh, within(jnp.asarray(pts), eps),
                                      backend=backend))
         np.testing.assert_array_equal(got, want, err_msg=backend)
@@ -73,7 +74,7 @@ def test_csr_backends_match_bruteforce(dataset):
     eps = 0.3
     adj = _d2(pts, pts) <= np.float32(eps) ** 2
     per_backend = {}
-    for backend in ("stackless", "stack"):
+    for backend in ("stackless", "stack", "pallas"):
         res = query_csr(bvh, within(jnp.asarray(pts), eps), backend=backend)
         offs, idx = np.asarray(res.offsets), np.asarray(res.indices)
         assert not bool(res.overflowed)
@@ -85,6 +86,7 @@ def test_csr_backends_match_bruteforce(dataset):
             assert row == frozenset(np.nonzero(adj[i])[0].tolist()), (backend, i)
         per_backend[backend] = rows
     assert per_backend["stackless"] == per_backend["stack"]
+    assert per_backend["stackless"] == per_backend["pallas"]
 
 
 @pytest.mark.parametrize("dataset", ADVERSARIAL)
@@ -103,7 +105,7 @@ def test_count_property_backends_agree(n, eps, seed):
     pts = np.random.default_rng(seed).uniform(0, 1, (n, 3)).astype(np.float32)
     bvh = _bvh(pts)
     want = (_d2(pts, pts) <= np.float32(eps) ** 2).sum(1)
-    for backend in ("stackless", "stack"):
+    for backend in ("stackless", "stack", "pallas"):
         got = np.asarray(query_count(bvh, within(jnp.asarray(pts), eps),
                                      backend=backend))
         np.testing.assert_array_equal(got, want, err_msg=backend)
@@ -111,7 +113,8 @@ def test_count_property_backends_agree(n, eps, seed):
 
 # --- output protocols --------------------------------------------------------
 
-def test_buffered_csr_overflow_retry():
+@pytest.mark.parametrize("backend", ["stackless", "pallas"])
+def test_buffered_csr_overflow_retry(backend):
     """Force an undersized first buffer: capacity=1 on a clustered set whose
     neighborhoods hold dozens of points — the single-pass protocol must
     detect overflow, double, and converge to the two-pass result."""
@@ -121,10 +124,10 @@ def test_buffered_csr_overflow_retry():
     bvh = _bvh(pts)
     pred = within(jnp.asarray(pts), 0.2)
 
-    _, counts, overflowed = query_fixed(bvh, pred, capacity=1)
+    _, counts, overflowed = query_fixed(bvh, pred, capacity=1, backend=backend)
     assert bool(overflowed) and int(jnp.max(counts)) > 1  # the trap is armed
 
-    buf = query_csr_buffered(bvh, pred, capacity=1)
+    buf = query_csr_buffered(bvh, pred, capacity=1, backend=backend)
     two = query_csr(bvh, pred)
     np.testing.assert_array_equal(np.asarray(buf.offsets),
                                   np.asarray(two.offsets))

@@ -151,6 +151,23 @@ def test_engine_file_exempt_from_r1():
     assert findings == []
 
 
+def test_wavefront_kernel_module_exempt_from_r1():
+    """kernels/wavefront.py is the blessed second home of BVH loops (the
+    engine's backend='pallas' kernel body)."""
+    findings = lint_source(textwrap.dedent(_R1_BAD),
+                           "src/repro/kernels/wavefront.py")
+    assert findings == []
+
+
+def test_r1_still_fires_in_unblessed_kernels_module():
+    """The allowlist is the wavefront module, not the kernels package: a
+    rogue rope loop in any OTHER kernels/ file keeps the one-fire
+    contract."""
+    findings = lint_source(textwrap.dedent(_R1_BAD),
+                           "src/repro/kernels/rogue.py")
+    assert [f.rule for f in findings] == ["R1-bvh-loop-outside-engine"]
+
+
 def test_generic_ignore_pragma():
     src = _R4_BAD.replace("jnp.round(diff / L) * L",
                           "jnp.round(diff / L) * L  # staticcheck: ignore")
